@@ -1,0 +1,25 @@
+"""Figure 1: accuracy vs FLOPs trade-off curves for MCA-BERT and
+MCA-DistilBERT (fine alpha grid on one task)."""
+from __future__ import annotations
+
+from . import glue_like as G
+
+ALPHA_GRID = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0)
+
+
+def run(fast: bool = False):
+    task = G.Task("syn-sst2", seq_len=128, n_classes=2, seed=2)
+    steps = 120 if fast else 300
+    out = {}
+    for name, n_layers in (("bert", 4), ("distilbert", 2)):
+        cfg = G.bert_config(n_layers=n_layers, seq_len=task.seq_len)
+        params = G.train_classifier(task, cfg, steps=steps, seed=2)
+        rows, base = G.mca_sweep(params, cfg, task, ALPHA_GRID,
+                                 n_seeds=4, n_eval=256 if fast else 512)
+        out[name] = {"baseline_acc": base["acc"], "rows": rows}
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks: wall time per call (CPU; interpret-mode numbers
+are structural only — TPU is the target) + analytic FLOPs-reduction derived
+from the MCA sampling schedule."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import amm
+from repro.models import attention as attn
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def bench_sampled_matmul(m=256, d=1024, f=256, r=2, block=128):
+    key = jax.random.PRNGKey(0)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, d))
+    w = jax.random.normal(kw, (d, f))
+    probs = amm.block_probs(w, block)
+    idx, inv = amm.draw_block_samples(ks, probs, r)
+
+    dense = jax.jit(lambda x, w: x @ w)
+    sampled = jax.jit(lambda x, w: amm.sampled_matmul(x, w, idx, inv, block))
+    t_dense = _time(dense, x, w)
+    t_samp = _time(sampled, x, w)
+    k = d // block
+    return {
+        "name": "mca_sampled_matmul",
+        "us_per_call": t_samp,
+        "us_dense": t_dense,
+        "flops_reduction": k / r,
+        "speedup_wallclock_cpu": t_dense / t_samp,
+    }
+
+
+def bench_chunked_attention(b=2, s=512, h=4, dh=64, chunk=128):
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, 1, dh))
+    k = jax.random.normal(kk, (b, s, h, dh))
+    v = jax.random.normal(kv, (b, s, h, dh))
+    scale = dh ** -0.5
+
+    onepass = jax.jit(lambda q, k, v: attn.onepass_attention(
+        q, k, v, scale=scale, causal=True, window=0, chunk=chunk)[0])
+    t = _time(onepass, q, k, v)
+
+    def three_pass(q, k, v):
+        m, lse = attn.chunked_lse(q, k, scale=scale, causal=True, window=0,
+                                  chunk=chunk)
+        cm = attn.chunked_colmax(q, k, lse, scale=scale, causal=True,
+                                 window=0, chunk=chunk)
+        out = attn.chunked_av(q, k, v, lse, scale=scale, causal=True,
+                              window=0, chunk=chunk)
+        return out, cm
+    t3 = _time(jax.jit(three_pass), q, k, v)
+    return {
+        "name": "chunked_attention",
+        "us_per_call": t,
+        "us_mca_3pass": t3,
+        "colmax_overhead": t3 / t,
+    }
+
+
+def run(fast: bool = False):
+    return [bench_sampled_matmul(), bench_chunked_attention()]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,114 @@
+"""Perf-iteration tool: lower one dry-run cell with config/step overrides
+and print the roofline delta vs the cached baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen3-32b \
+        --shape train_4k [--mca] [--set n_micro=4] [--set banded_local=True]
+
+Each invocation is one hypothesis->change->measure cycle; paste the output
+into EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import ast
+import json
+
+from repro.configs import SHAPES
+from repro.launch.dryrun import (analyze, analyze_cell_extrapolated,
+                                 lower_cell, roofline_terms)
+
+
+def parse_set(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mca", action="store_true")
+    ap.add_argument("--set", action="append", dest="sets",
+                    help="cfg override, e.g. --set banded_local=True")
+    ap.add_argument("--baseline", default="dryrun_results")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--skip-extrapolation", action="store_true")
+    args = ap.parse_args()
+
+    overrides = parse_set(args.sets)
+    print(f"== {args.arch} x {args.shape} mca={args.mca} "
+          f"overrides={overrides}")
+
+    lowered, compiled, meta = lower_cell(
+        args.arch, args.shape, multi_pod=False, mca=args.mca,
+        extra_overrides=overrides)
+    res = analyze(compiled, meta, 256)
+    print(f"compile {meta['compile_s']:.1f}s  "
+          f"temp {res.get('temp_size_in_bytes', 0) / 1e9:.2f}GB")
+
+    if not args.skip_extrapolation:
+        corr = analyze_cell_extrapolated(args.arch, args.shape,
+                                         mca=args.mca)
+        # re-run extrapolation WITH the overrides
+        from repro.launch import dryrun as dr
+        from repro.configs import get_config
+        base_cfg = get_config(args.arch)
+        units_real = dr._real_units(base_cfg)
+        results = {}
+        for units in (1, 2):
+            ov = dr._depth_overrides(base_cfg, units)
+            ov.update(unroll_layers=True, unroll_inner=True)
+            ov.update(overrides)
+            _, comp, m = lower_cell(args.arch, args.shape, multi_pod=False,
+                                    mca=args.mca, extra_overrides=ov)
+            results[units] = analyze(comp, m, 256)
+
+        def fit(key, sub=None):
+            v1 = results[1][key] if sub is None else results[1][key][sub]
+            v2 = results[2][key] if sub is None else results[2][key][sub]
+            if isinstance(v1, dict):
+                v1, v2 = v1["bytes"], v2["bytes"]
+            return v1 + (v2 - v1) * (units_real - 1)
+
+        cur = {"flops": fit("flops"),
+               "bytes_accessed": fit("bytes_accessed"),
+               "collectives": {"total_bytes": fit("collectives",
+                                                  "total_bytes")}}
+        rt = roofline_terms(cur)
+        print(f"corrected: flops {cur['flops']:.3e} "
+              f"bytes {cur['bytes_accessed']:.3e} "
+              f"coll {cur['collectives']['total_bytes']:.3e}")
+        print(f"terms: tc {rt['t_compute']:.3f} tm {rt['t_memory']:.3f} "
+              f"tcoll {rt['t_collective']:.3f}  [{rt['bottleneck']}]")
+        # per-kind collective census at units=2 (shape of traffic)
+        print("collective census (units=2 unrolled):")
+        for kind, st in results[2]["collectives"].items():
+            if isinstance(st, dict) and st["count"]:
+                print(f"  {kind:20s} x{st['count']:4d} "
+                      f"{st['bytes'] / 1e9:7.2f} GB")
+
+    # baseline comparison
+    tag = f"{args.arch}__{args.shape}__sp__{'mca' if args.mca else 'base'}"
+    path = os.path.join(args.baseline, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            base = json.load(f)
+        bc = base.get("corrected", {})
+        if bc and not args.skip_extrapolation:
+            brt = bc.get("roofline", {})
+            print(f"baseline terms: tc {brt.get('t_compute', 0):.3f} "
+                  f"tm {brt.get('t_memory', 0):.3f} "
+                  f"tcoll {brt.get('t_collective', 0):.3f}")
+            print(f"baseline temp {base.get('temp_size_in_bytes', 0) / 1e9:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Assemble EXPERIMENTS.md tables from dryrun_results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir dryrun_results]
+
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers in
+EXPERIMENTS.md in place (idempotent: regenerates between marker lines).
+"""
+from __future__ import annotations
+
+import argparse
+import re
+
+from . import roofline
+
+
+def dryrun_table(rows) -> str:
+    """Compile/fit proof table (both meshes)."""
+    hdr = ("| arch | shape | mesh | compiled | temp GB | args GB | "
+           "AG GB | AR GB | RS GB | A2A GB |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["cell"]["arch"],
+                                         r["cell"]["shape"],
+                                         r["cell"]["multi_pod"],
+                                         r["cell"]["mca"])):
+        c = r["cell"]
+        if c["mca"]:
+            continue
+        mesh = "2x16x16" if c["multi_pod"] else "16x16"
+        if "error" in r:
+            out.append(f"| {c['arch']} | {c['shape']} | {mesh} | "
+                       f"**FAIL** | | | | | | |")
+            continue
+        cl = r["collectives"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {mesh} | "
+            f"ok ({r.get('compile_s', 0):.0f}s) | "
+            f"{r.get('temp_size_in_bytes', 0) / 1e9:.1f} | "
+            f"{r.get('argument_size_in_bytes', 0) / 1e9:.1f} | "
+            f"{cl['all-gather']['bytes'] / 1e9:.2f} | "
+            f"{cl['all-reduce']['bytes'] / 1e9:.2f} | "
+            f"{cl['reduce-scatter']['bytes'] / 1e9:.2f} | "
+            f"{cl['all-to-all']['bytes'] / 1e9:.2f} |")
+    return "\n".join(out)
+
+
+def splice(md_path: str, marker: str, content: str) -> None:
+    with open(md_path) as f:
+        text = f.read()
+    block = f"<!-- {marker} -->\n{content}\n<!-- /{marker} -->"
+    pat = re.compile(rf"<!-- {marker} -->.*?(<!-- /{marker} -->|$(?![\s\S]))",
+                     re.S)
+    if f"<!-- {marker} -->" in text:
+        if f"<!-- /{marker} -->" in text:
+            text = pat.sub(block, text)
+        else:
+            text = text.replace(f"<!-- {marker} -->", block)
+    with open(md_path, "w") as f:
+        f.write(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun_results")
+    ap.add_argument("--md", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    rows = roofline.load_results(args.dir)
+    splice(args.md, "DRYRUN_TABLE", dryrun_table(rows))
+    sp = [r for r in rows if not r["cell"]["multi_pod"]
+          and not r["cell"]["mca"]]
+    splice(args.md, "ROOFLINE_TABLE", roofline.table(sp))
+    print(f"updated {args.md} from {len(rows)} cells; "
+          f"summary: {roofline.summary(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Roofline report: read dryrun_results/*.json, emit the per-(arch x shape)
+three-term table + analytic cross-checks.
+
+Terms (per device, seconds):
+  t_compute    = HLO_FLOPs / peak_bf16
+  t_memory     = HLO_bytes / HBM_bw          (unfused upper bound — the CPU
+                 cost model counts every elementwise intermediate; fused
+                 TPU traffic is lower, see analytic_memory)
+  t_collective = collective result bytes / ICI link bw
+
+HLO numbers use the depth-extrapolation correction (scan bodies are
+cost-counted once; see launch/dryrun.py).  MODEL_FLOPS = 6*N_active*D
+(2*N*D for fwd-only kinds) and the useful fraction = MODEL/HLO flops.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.mesh import HW
+
+
+def load_results(out_dir: str = "dryrun_results") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def analytic_memory_bytes(cell: dict, corrected: dict) -> float:
+    """Fused-traffic estimate: params read per pass + 2x activation bytes
+    per matmul boundary ~= model_flops / intensity. We approximate with
+    bytes = max(arg bytes, flops / 100) — a 100-FLOP/byte fusion assumption
+    consistent with bf16 transformer blocks at these widths."""
+    return corrected["flops"] / 100.0
+
+
+def table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | mesh | mca | fits | t_comp | t_mem(ub) | "
+           "t_coll | bottleneck | MODEL/HLO | compile_s |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["cell"]["arch"],
+                                         r["cell"]["shape"],
+                                         r["cell"]["multi_pod"])):
+        c = r["cell"]
+        mesh = "2x16x16" if c["multi_pod"] else "16x16"
+        if "error" in r:
+            out.append(f"| {c['arch']} | {c['shape']} | {mesh} | "
+                       f"{'on' if c['mca'] else 'off'} | FAIL | | | | | | |")
+            continue
+        temp = r.get("temp_size_in_bytes", 0)
+        fits = "Y" if temp <= 16e9 else f"N({temp / 1e9:.0f}G)"
+        corr = r.get("corrected", {})
+        rt = dict(corr.get("roofline", r.get("roofline_raw", {})))
+        for k in ("t_compute", "t_memory", "t_collective"):
+            if k in rt:
+                rt[k] = max(rt[k], 0.0)   # extrapolation-noise clamp
+        uf = corr.get("useful_fraction", float("nan"))
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {mesh} | "
+            f"{'on' if c['mca'] else 'off'} | {fits} | "
+            f"{rt.get('t_compute', 0):.3f} | {rt.get('t_memory', 0):.3f} | "
+            f"{rt.get('t_collective', 0):.3f} | "
+            f"{rt.get('bottleneck', '?')[2:]} | {uf:.2f} | "
+            f"{r.get('compile_s', 0):.0f} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[dict]) -> Dict:
+    ok = [r for r in rows if "error" not in r]
+    fail = [r for r in rows if "error" in r]
+    fits = [r for r in ok if r.get("temp_size_in_bytes", 0) <= 16e9]
+    return {"cells": len(rows), "compiled": len(ok), "failed": len(fail),
+            "fits_hbm": len(fits)}
+
+
+if __name__ == "__main__":
+    rows = load_results()
+    print(table(rows))
+    print(summary(rows))

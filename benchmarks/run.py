@@ -1,0 +1,90 @@
+"""Benchmark entrypoint: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's
+headline number).  ``--full`` runs paper-scale task counts/seeds; default
+is the fast profile so `python -m benchmarks.run` completes on CPU."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _csv(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json-out", default="bench_results.json")
+    args = ap.parse_args()
+    fast = not args.full
+    results = {}
+
+    from . import kernel_bench
+    kb = kernel_bench.run(fast=fast)
+    results["kernels"] = kb
+    for r in kb:
+        _csv(r["name"], r["us_per_call"],
+             r.get("flops_reduction", r.get("colmax_overhead", "")))
+
+    from . import table1_bert
+    t0 = time.time()
+    t1 = table1_bert.run(fast=fast)
+    results["table1"] = t1
+    us = (time.time() - t0) * 1e6
+    red = [row["flops_reduction"] for r in t1 for row in r["rows"][1:]]
+    acc_drop = [r["baseline_acc"] - r["rows"][1]["acc"] for r in t1]
+    _csv("table1_mca_bert", us / max(len(red), 1),
+         f"mean_flops_reduction={sum(red) / len(red):.2f}x"
+         f";acc_drop_a0.2={sum(acc_drop) / len(acc_drop):.4f}")
+
+    from . import table2_distilbert
+    t0 = time.time()
+    t2 = table2_distilbert.run(fast=fast)
+    results["table2"] = t2
+    us = (time.time() - t0) * 1e6
+    red = [row["flops_reduction"] for r in t2 for row in r["rows"][1:]]
+    _csv("table2_mca_distilbert", us / max(len(red), 1),
+         f"mean_flops_reduction={sum(red) / len(red):.2f}x")
+
+    from . import table3_longformer
+    t0 = time.time()
+    t3 = table3_longformer.run(fast=fast)
+    results["table3"] = t3
+    us = (time.time() - t0) * 1e6
+    red = [row["flops_reduction"] for r in t3 for row in r["rows"][1:]]
+    _csv("table3_mca_longformer", us / max(len(red), 1),
+         f"mean_flops_reduction={sum(red) / len(red):.2f}x")
+
+    from . import fig1_tradeoff
+    t0 = time.time()
+    f1 = fig1_tradeoff.run(fast=fast)
+    results["fig1"] = f1
+    us = (time.time() - t0) * 1e6
+    knee = min((row for row in f1["bert"]["rows"][1:]),
+               key=lambda r: abs(r["acc"] - f1["bert"]["baseline_acc"]
+                                 + 0.01))
+    _csv("fig1_tradeoff", us / 8,
+         f"knee_alpha={knee['alpha']};knee_flops={knee['flops_reduction']:.2f}x")
+
+    # roofline summary from the dry-run cache (if present)
+    try:
+        from . import roofline
+        rows = roofline.load_results()
+        if rows:
+            s = roofline.summary(rows)
+            _csv("roofline_dryrun", 0.0,
+                 f"cells={s['cells']};compiled={s['compiled']};"
+                 f"fits={s['fits_hbm']}")
+            results["roofline_summary"] = s
+    except Exception:                                     # noqa: BLE001
+        pass
+
+    with open(args.json_out, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

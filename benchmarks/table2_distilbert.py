@@ -1,0 +1,19 @@
+"""Table 2: MCA-DistilBERT — same protocol on the 2x-compressed encoder,
+showing MCA composes with model compression (paper Sec. 'Integration with
+Compressed Transformers')."""
+from __future__ import annotations
+
+from . import table1_bert
+
+
+def run(fast: bool = False):
+    # distil = half the layers of the table-1 encoder
+    return table1_bert.run(fast=fast, n_layers=2)
+
+
+def format_table(results) -> str:
+    return table1_bert.format_table(results)
+
+
+if __name__ == "__main__":
+    print(format_table(run()))

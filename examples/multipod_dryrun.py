@@ -1,0 +1,27 @@
+"""Example: reproduce one multi-pod dry-run cell programmatically.
+
+Lowers + compiles qwen3-32b train_4k on the 2x16x16 (512-chip) production
+mesh using placeholder devices, then prints the memory / cost / collective
+analysis — the exact artifact EXPERIMENTS.md §Dry-run is built from.
+
+Run:  PYTHONPATH=src python examples/multipod_dryrun.py
+(takes a few minutes: it compiles a 512-way SPMD program on CPU)
+"""
+# XLA device-count override MUST precede any jax import
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import analyze, lower_cell, roofline_terms
+
+lowered, compiled, meta = lower_cell("qwen3-32b", "train_4k",
+                                     multi_pod=True, mca=False)
+result = analyze(compiled, meta, mesh_devices=512)
+
+print(f"compile time      : {meta['compile_s']:.1f}s")
+print(f"per-device temp   : {result.get('temp_size_in_bytes', 0) / 1e9:.2f} GB")
+print(f"HLO flops (raw)   : {result.get('flops', 0):.3e}")
+print("collectives       :")
+for kind, st in result["collectives"].items():
+    if isinstance(st, dict) and st["count"]:
+        print(f"  {kind:20s} x{st['count']:4d}  {st['bytes'] / 1e9:.2f} GB")
+print(f"roofline terms    : {roofline_terms(result)}")

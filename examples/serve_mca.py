@@ -1,0 +1,84 @@
+"""Serving example: batched generation with and without MCA, reporting the
+encoding-FLOPs reduction of the prefill (the paper's deployment story:
+MCA is a drop-in inference-time switch — no retraining).
+
+Run:  PYTHONPATH=src python examples/serve_mca.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import MCAConfig
+from repro.models import build_model, reduced
+from repro.serve import Engine
+
+ARCH = "chatglm3-6b"
+
+cfg_off = reduced(get_config(ARCH))
+model = build_model(cfg_off)
+params = model.init(jax.random.PRNGKey(0))
+
+# brief training so logits have real margins (a random net's argmax flips
+# under any perturbation, which would make the comparison meaningless)
+from repro.data import SyntheticLM
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+data = SyntheticLM(cfg_off.vocab_size, 48, 8, seed=0)
+step = jax.jit(make_train_step(model, adamw.AdamWConfig(lr=3e-3)),
+               donate_argnums=(0, 1))
+opt = adamw.init_state(params)
+for i in range(40):
+    params, opt, m = step(params, opt,
+                          jax.tree.map(jax.numpy.asarray, data.batch(i)))
+print(f"warmup train loss {float(m['total_loss']):.3f}")
+
+rng = np.random.default_rng(0)
+prompts = np.asarray(data.batch(99)["tokens"][:2, :48])
+
+# exact serving
+eng = Engine(model, params, batch_size=2, max_len=96)
+t0 = time.time()
+out_exact = eng.generate(prompts, max_new=12)
+t_exact = time.time() - t0
+
+# MCA serving: same params, approximation switched on
+cfg_on = cfg_off.replace(mca=MCAConfig(enabled=True, alpha=0.3, block=16,
+                                       sites=("v_proj",)))
+model_on = build_model(cfg_on)
+eng_on = Engine(model_on, params, batch_size=2, max_len=96,
+                mca_enabled=True)
+t0 = time.time()
+out_mca = eng_on.generate(prompts, max_new=12)
+t_mca = time.time() - t0
+
+print(f"exact  : {out_exact[0].tolist()}")
+print(f"mca    : {out_mca[0].tolist()}")
+print(f"wall (CPU, structural only): exact {t_exact:.2f}s vs "
+      f"mca {t_mca:.2f}s")
+
+# teacher-forced fidelity: same context, exact vs MCA next-token argmax.
+# (free-running generations diverge after any flipped token by
+# construction, so per-position agreement there is not meaningful.)
+ctx = {"tokens": jax.numpy.asarray(data.batch(123)["tokens"][:2])}
+hid_e, _, _ = model.forward_hidden(params, ctx)
+hid_m, _, _ = build_model(cfg_on).forward_hidden(params, ctx,
+                                                 jax.random.PRNGKey(3))
+from repro.models.api import _logits
+pred_e = np.asarray(jax.numpy.argmax(
+    _logits(params, cfg_off, hid_e)[..., :cfg_off.vocab_size], -1))
+pred_m = np.asarray(jax.numpy.argmax(
+    _logits(params, cfg_on, hid_m)[..., :cfg_on.vocab_size], -1))
+agree = float((pred_e == pred_m).mean())
+print(f"teacher-forced next-token agreement at alpha=0.3: {agree:.2f} "
+      f"(rises toward 1.0 as alpha -> 0)")
+
+# measure the prefill FLOPs reduction (the paper's metric) directly
+loss_batch = {"tokens": jax.numpy.asarray(prompts),
+              "labels": jax.numpy.asarray(prompts)}
+_, metrics = jax.jit(lambda p, b, k: model_on.loss(p, b, k))(
+    params, loss_batch, jax.random.PRNGKey(1))
+red = float(metrics["mca_exact_flops"] / metrics["mca_flops"])
+print(f"attention-encoding FLOPs reduction at alpha=0.3: {red:.2f}x")

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production stack — data pipeline, AdamW + cosine schedule,
+microbatch accumulation, async checkpointing, watchdog, restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--mca]
+
+At ~100M params on CPU this takes a while; --tiny trains a 1-minute
+version with identical plumbing.
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core.policy import MCAConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train import Trainer, TrainerConfig
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--mca", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    mca = MCAConfig(enabled=args.mca, alpha=0.4, block=64,
+                    sites=("v_proj",))
+    if args.tiny:
+        cfg = get_config("starcoder2-3b", mca=mca).replace(
+            n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+            d_ff=256, vocab_size=1024, dtype="float32", attn_chunk=64,
+            logits_chunk=64)
+        seq, batch, n_micro = 128, 8, 1
+        steps = min(args.steps, 60)
+    else:
+        # ~100M-param decoder (GQA + RoPE + SwiGLU), bf16, remat+scan
+        cfg = get_config("starcoder2-3b", mca=mca).replace(
+            n_layers=10, d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+            d_ff=2048, vocab_size=32000, dtype="float32")
+        seq, batch, n_micro = 512, 8, 2
+        steps = args.steps
+
+    model = build_model(cfg)
+    n_params = sum(
+        p.size for p in jax.tree.leaves(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model: {cfg.name} modified, {n_params / 1e6:.1f}M params, "
+          f"seq {seq}, batch {batch}, mca={'on' if args.mca else 'off'}")
+
+    data = SyntheticLM(cfg.vocab_size, seq, batch, seed=0)
+    opt_cfg = adamw.AdamWConfig(
+        lr=3e-4, schedule=adamw.cosine_schedule(warmup=20, total=steps))
+    step = jax.jit(make_train_step(model, opt_cfg, n_micro=n_micro),
+                   donate_argnums=(0, 1))
+    trainer = Trainer(model, opt_cfg, data, step,
+                      TrainerConfig(total_steps=steps,
+                                    ckpt_dir=args.ckpt_dir,
+                                    ckpt_every=100, log_every=10))
+    out = trainer.run()
+    losses = [h["loss"] for h in out["history"]]
+    print(f"steps/s {out['steps'] / out['wall_s']:.2f}  "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    import logging
+    logging.basicConfig(level=logging.INFO)
+    main()

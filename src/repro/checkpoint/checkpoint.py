@@ -1,0 +1,132 @@
+"""Atomic, async, resharding checkpoints.
+
+Layout:  <dir>/step_<N>/   arrays.npz + manifest.json   (tmp-dir + rename
+for atomicity).  Restore accepts a *different* mesh/shardings than the one
+that saved — elastic restart (N hosts -> M hosts) is just restore with the
+new shardings; leaves are device_put with the target NamedSharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bf16/f8 natively: store as a same-width uint view
+# and record the logical dtype in the manifest.
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, logical: str):
+    if logical in _EXOTIC:
+        return arr.view(getattr(ml_dtypes, logical))
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the final directory."""
+    leaves, paths, _ = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays, dtypes = {}, []
+    for i, leaf in enumerate(leaves):
+        arr, logical = _to_storable(np.asarray(leaf))
+        arrays[f"a{i}"] = arr
+        dtypes.append(logical)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "dtypes": dtypes,
+        "shapes": [list(a.shape) for a in arrays.values()],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, *, shardings: Any = None):
+    """Restore into the structure of ``like`` (tree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching tree of
+    NamedShardings for the *current* mesh (elastic reshard-on-restore)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves, paths, treedef = _flatten(like)
+    assert paths == manifest["paths"], "checkpoint/model structure mismatch"
+    sh_leaves = (jax.tree_util.tree_leaves(shardings)
+                 if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = _from_storable(data[f"a{i}"], manifest["dtypes"][i])
+        expect = tuple(leaf.shape)
+        assert arr.shape == expect, (paths[i], arr.shape, expect)
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """One-deep async write queue: snapshot to host, write on a thread.
+    ``wait()`` blocks until the in-flight write lands (call before exit)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._thread = threading.Thread(
+            target=save, args=(self.dir, step, host_tree),
+            kwargs={"keep": self.keep}, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

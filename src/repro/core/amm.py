@@ -1,0 +1,117 @@
+"""Approximate matrix multiplication (AMM) via Monte-Carlo block sampling.
+
+This is the mathematical heart of the paper (Drineas-Kannan-Mahoney 2006,
+as used by MCA, Kim & Ko AAAI 2022), adapted to TPU: instead of sampling
+single columns of ``X`` / rows of ``W`` we sample 128-wide *blocks* so every
+sampled term is an MXU-aligned dense matmul.  The estimator over a block
+partition is identical in structure to the column estimator:
+
+    X @ W = sum_b X[:, b] @ W[b]                      (b ranges over blocks)
+          ~ (1/R) * sum_{k=1..R} X[:, s_k] @ W[s_k] / p(s_k)
+
+with ``s_k ~ p`` i.i.d. with replacement.  Unbiasedness and the Lemma-1 /
+Theorem-2 bounds hold verbatim with block norms (see error_bounds.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 128
+
+
+def num_blocks(d: int, block: int = DEFAULT_BLOCK) -> int:
+    if d % block != 0:
+        raise ValueError(f"feature dim {d} not divisible by block {block}")
+    return d // block
+
+
+def block_sq_norms(w: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Per-block squared Frobenius norm of W's row-blocks.
+
+    w: [d, f]  ->  [K] where K = d // block.
+    """
+    d = w.shape[0]
+    k = num_blocks(d, block)
+    w2 = jnp.sum(jnp.square(w.astype(jnp.float32)), axis=tuple(range(1, w.ndim)))
+    return jnp.sum(w2.reshape(k, block), axis=1)
+
+
+def block_probs(w: jax.Array, block: int = DEFAULT_BLOCK,
+                floor: float = 1e-12) -> jax.Array:
+    """Eq. (6) of the paper at block granularity: p(b) ∝ ||W[b]||_F^2.
+
+    Depends only on the weights, so callers cache it per layer ("one-time
+    process" in the paper). Returns [K] probabilities summing to 1.
+    """
+    n2 = block_sq_norms(w, block)
+    n2 = jnp.maximum(n2, floor)
+    return n2 / jnp.sum(n2)
+
+
+def draw_block_samples(key: jax.Array, probs: jax.Array, r: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Draw ``r`` i.i.d. block indices with replacement from ``probs``.
+
+    Returns (idx [r] int32, inv_rp [r] f32) where inv_rp[k] = 1/(r*p[idx[k]])
+    is the estimator weight of sample k.
+    """
+    idx = jax.random.categorical(key, jnp.log(probs), shape=(r,))
+    inv_rp = 1.0 / (r * probs[idx])
+    return idx.astype(jnp.int32), inv_rp.astype(jnp.float32)
+
+
+def sampled_matmul(x: jax.Array, w: jax.Array, idx: jax.Array,
+                   inv_rp: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Monte-Carlo estimate of ``x @ w`` from sampled blocks.
+
+    x: [..., n, d], w: [d, f], idx: [R], inv_rp: [R]  ->  [..., n, f]
+
+    Pure-jnp formulation (gather blocks, weighted einsum); the Pallas kernel
+    in kernels/mca_matmul.py implements the same contraction with
+    scalar-prefetch DMA so un-sampled blocks never leave HBM.
+    """
+    d = x.shape[-1]
+    f = w.shape[-1]
+    k = num_blocks(d, block)
+    r = idx.shape[0]
+    xb = x.reshape(*x.shape[:-1], k, block)          # [..., n, K, B]
+    xg = jnp.take(xb, idx, axis=-2)                  # [..., n, R, B]
+    wb = w.reshape(k, block, f)                      # [K, B, f]
+    wg = jnp.take(wb, idx, axis=0)                   # [R, B, f]
+    wg = wg * inv_rp[:, None, None].astype(w.dtype)  # fold estimator weights
+    out = jnp.einsum("...nrb,rbf->...nf", xg, wg,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def exact_flops(n: int, d: int, f: int) -> int:
+    """FLOPs of the exact encoding n x d @ d x f (paper baseline)."""
+    return 2 * n * d * f
+
+
+def sampled_flops(r_blocks: jax.Array | int, f: int,
+                  block: int = DEFAULT_BLOCK) -> jax.Array | int:
+    """FLOPs of the MC estimator given per-token sampled block counts.
+
+    r_blocks: int or [n] int array of sampled-block counts per token.
+    Matches the paper's accounting: only the AXW encoding term.
+    """
+    if isinstance(r_blocks, int):
+        return 2 * r_blocks * block * f
+    # float accumulation: int32 would overflow for >1e9 FLOPs
+    return jnp.sum(2.0 * r_blocks.astype(jnp.float32) * block * f)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "block"))
+def mc_matmul(key: jax.Array, x: jax.Array, w: jax.Array, r: int,
+              block: int = DEFAULT_BLOCK,
+              probs: jax.Array | None = None) -> jax.Array:
+    """Convenience: draw samples and estimate x @ w with ``r`` blocks."""
+    if probs is None:
+        probs = block_probs(w, block)
+    idx, inv_rp = draw_block_samples(key, probs, r)
+    return sampled_matmul(x, w, idx, inv_rp, block)

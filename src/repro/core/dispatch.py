@@ -1,0 +1,143 @@
+"""Precision routing: MoE-style capacity dispatch of tokens to sample tiers.
+
+Mode B ("tiered"): tokens are routed to a small set of tiers, each tier is
+one block-sampled matmul with a *static* sample count and *static* token
+capacity, so XLA sees fixed shapes and the FLOPs savings are real wall-clock
+savings on TPU.  Overflowing tokens are demoted to the next-cheaper tier in
+priority order (highest attention keeps its precision); tier 0 is unbounded.
+
+Mode A ("per_token"): the paper's exact per-token estimator (every token j
+draws its own r_j samples i.i.d. with replacement).  Used as the accuracy
+oracle and for paper-faithful benchmark accounting; its jnp formulation
+costs one dense matmul on CPU while the *estimator* FLOPs are accounted
+analytically (amm.sampled_flops), exactly like the paper counts FLOPs.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .amm import (DEFAULT_BLOCK, block_probs, draw_block_samples, num_blocks,
+                  sampled_matmul)
+
+
+def _rank_within_tier(tier: jax.Array, importance: jax.Array, n_tiers: int
+                      ) -> jax.Array:
+    """Rank of each token inside its tier, ordered by descending importance.
+
+    Pure integer routing: gradients are stopped (the transpose of the
+    importance-dependent scatter is both meaningless and unsupported for
+    batched gathers on this jaxlib)."""
+    importance = jax.lax.stop_gradient(importance)
+    tier = jax.lax.stop_gradient(tier)
+    n = tier.shape[0]
+    order = jnp.argsort(-importance)                    # priority order
+    tier_sorted = tier[order]
+    onehot = tier_sorted[:, None] == jnp.arange(n_tiers)[None, :]
+    rank_cum = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    # row-wise pick of column tier_sorted[i] via the one-hot (avoids a
+    # batched gather, whose transpose is unsupported on this jaxlib)
+    rank_sorted = jnp.sum(jnp.where(onehot, rank_cum, 0), axis=1)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    return rank
+
+
+def apply_capacity(tier: jax.Array, importance: jax.Array,
+                   caps: Sequence[int]) -> jax.Array:
+    """Demote capacity overflow to the next cheaper tier (tier 0 unbounded).
+
+    tier: [n] int32, importance: [n] (higher keeps precision first),
+    caps: per-tier static capacities; caps[0] is ignored (unbounded).
+    """
+    n_tiers = len(caps)
+    for t in range(n_tiers - 1, 0, -1):
+        rank = _rank_within_tier(tier, importance, n_tiers)
+        overflow = (tier == t) & (rank >= caps[t])
+        tier = jnp.where(overflow, t - 1, tier)
+    return tier
+
+
+def tiered_mca_matmul(key: jax.Array, x: jax.Array, w: jax.Array,
+                      tier: jax.Array, importance: jax.Array,
+                      ladder: Sequence[int], caps: Sequence[int],
+                      block: int = DEFAULT_BLOCK,
+                      probs: jax.Array | None = None,
+                      use_kernel: bool = False) -> jax.Array:
+    """Dispatch tokens to tiers and run one sampled matmul per tier.
+
+    x: [n, d]; w: [d, f]; tier/importance: [n]; ladder: ascending block
+    counts, last entry == K means exact. caps: static per-tier capacities
+    (caps[0] should be >= n). Returns [n, f].
+
+    use_kernel routes each tier's sampled matmul to the Pallas
+    scalar-prefetch kernel (kernels/mca_matmul.py) when tile shapes align;
+    the jnp path is the reference/dry-run implementation with identical
+    math.
+    """
+    n, d = x.shape
+    f = w.shape[-1]
+    k = num_blocks(d, block)
+    n_tiers = len(ladder)
+    if probs is None:
+        probs = block_probs(w, block)
+    tier = apply_capacity(tier, importance, caps)
+    rank = _rank_within_tier(tier, importance, n_tiers)
+
+    y = jnp.zeros((n, f), dtype=x.dtype)
+    keys = jax.random.split(key, n_tiers)
+    for t, r_t in enumerate(ladder):
+        cap = int(caps[t])
+        mask = tier == t
+        fit = mask & (rank < cap)
+        slot = jnp.where(fit, rank, cap)                       # trash row = cap
+        buf = jnp.zeros((cap + 1, d), x.dtype).at[slot].add(
+            jnp.where(fit[:, None], x, 0))
+        if r_t >= k:                                           # exact tier
+            out = jnp.dot(buf[:cap], w,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+        else:
+            idx, inv_rp = draw_block_samples(keys[t], probs, int(r_t))
+            if use_kernel and cap % min(128, cap) == 0 and block >= 128:
+                from repro.kernels import mca_matmul as kernel_mm
+                out = kernel_mm(buf[:cap], w, idx, inv_rp, block=block)
+            else:
+                out = sampled_matmul(buf[:cap], w, idx, inv_rp, block)
+        gathered = jnp.take(out, jnp.clip(rank, 0, cap - 1), axis=0)
+        y = jnp.where(fit[:, None], gathered, y)
+    return y
+
+
+def per_token_mca_matmul(key: jax.Array, x: jax.Array, w: jax.Array,
+                         r_blocks: jax.Array, block: int = DEFAULT_BLOCK,
+                         probs: jax.Array | None = None) -> jax.Array:
+    """Paper-faithful per-token estimator (Mode A / oracle).
+
+    Each token j draws r_blocks[j] i.i.d. block samples with replacement.
+    Implemented via per-token multinomial counts so the jnp computation is
+    one dense contraction (estimator FLOPs are accounted analytically).
+
+    x: [n, d]; r_blocks: [n] int in [1, K]. Returns [n, f].
+    """
+    n, d = x.shape
+    f = w.shape[-1]
+    k = num_blocks(d, block)
+    if probs is None:
+        probs = block_probs(w, block)
+    # K draws per token; token j uses only its first r_j draws.
+    idx = jax.random.categorical(key, jnp.log(probs), shape=(n, k))  # [n, K]
+    use = jnp.arange(k)[None, :] < r_blocks[:, None]                 # [n, K]
+    onehot = (idx[:, :, None] == jnp.arange(k)[None, None, :]) & use[:, :, None]
+    counts = jnp.sum(onehot.astype(jnp.float32), axis=1)             # [n, K]
+    scale = counts / (r_blocks[:, None].astype(jnp.float32) * probs[None, :])
+    xb = x.reshape(n, k, block)
+    wb = w.reshape(k, block, f)
+    out = jnp.einsum("nk,nkb,kbf->nf", scale.astype(x.dtype), xb, wb,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def tier_histogram(tier: jax.Array, n_tiers: int) -> jax.Array:
+    """Token counts per tier — used for capacity calibration & FLOPs accounting."""
+    return jnp.sum(tier[:, None] == jnp.arange(n_tiers)[None, :], axis=0)

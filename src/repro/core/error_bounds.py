@@ -1,0 +1,49 @@
+"""Theoretical error bounds of MCA (Lemma 1 / Theorem 2 of the paper).
+
+Block-sampling note: the DKM proof of Lemma 1 only uses that the summands
+{X[:,i] W[i]} partition the contraction and that p is a probability over
+the partition; with 128-wide blocks the partition is coarser but the bound
+is unchanged with r = number of *block* samples:
+
+    E || H[j] - X[j]W ||  <=  ||X[j]||_2 ||W||_F / sqrt(r).
+
+(The optimal-p proof uses p(b) ∝ ||X[:,b]||·||W[b]||; the paper deliberately
+uses the W-only marginal p(b) ∝ ||W[b]||², which keeps the bound up to the
+ratio max_b ||X[:,b]||/||X|| — we test the *paper's* inequality empirically
+in tests/test_error_bounds.py.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lemma1_bound(x_row_norm: jax.Array, w_fro: jax.Array,
+                 r: jax.Array) -> jax.Array:
+    """E||H̃[j] - X[j]W||  <=  ||X[j]||_2 ||W||_F / sqrt(r_j)   (Eq. 7)."""
+    return x_row_norm * w_fro / jnp.sqrt(r.astype(jnp.float32))
+
+
+def theorem2_mean_bound(alpha: float, beta: jax.Array,
+                        w_fro: jax.Array) -> jax.Array:
+    """E||Ỹ[i] - Y[i]||  <=  alpha * beta * ||W||_F   (Eq. 10).
+
+    beta = mean_j ||X[j]||_2.  Holds when sqrt(r_j) = n max(A[:,j]) / alpha
+    and A is positive (Eq. 9 schedule).
+    """
+    return alpha * beta * w_fro
+
+
+def theorem2_tail_bound(alpha: float, beta: jax.Array, w_fro: jax.Array,
+                        delta: float) -> jax.Array:
+    """P(||Ỹ[i]-Y[i]|| > alpha*beta*||W||_F / delta) <= delta  (Eq. 11, Markov)."""
+    return alpha * beta * w_fro / delta
+
+
+def beta_of(x: jax.Array) -> jax.Array:
+    """beta = (1/n) sum_j ||X[j]||_2 over the last-but-one axis."""
+    return jnp.mean(jnp.linalg.norm(x.astype(jnp.float32), axis=-1), axis=-1)
+
+
+def w_fro(w: jax.Array) -> jax.Array:
+    return jnp.linalg.norm(w.astype(jnp.float32))

@@ -1,0 +1,81 @@
+"""Per-token sample schedules: Eq. (9) of the paper + the TPU tier ladder.
+
+Paper:  sqrt(r_j) = n * max(A[:, j]) / alpha   (r_j in *columns*, <= d).
+TPU:    quantize r_j onto a geometric ladder of block counts
+        R_t in {r_min, 2 r_min, ..., K} (K = d/block; top tier == exact),
+        then route tokens to tiers like an MoE routes tokens to experts.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .amm import DEFAULT_BLOCK, num_blocks
+
+
+def r_cols_from_attention(colmax: jax.Array, n: int, alpha: float,
+                          d: int) -> jax.Array:
+    """Eq. (9): r_j = (n * max_i A[i,j] / alpha)^2, clipped to [1, d].
+
+    colmax: [..., n] column max of the attention matrix (>=0, <=1).
+    Returns float r in columns (not yet block-quantized).
+    """
+    sqrt_r = (n * colmax) / alpha
+    r = jnp.square(sqrt_r)
+    return jnp.clip(r, 1.0, float(d))
+
+
+def r_blocks_from_cols(r_cols: jax.Array, block: int = DEFAULT_BLOCK
+                       ) -> jax.Array:
+    """Ceil-quantize a column budget to whole sampled blocks (>=1)."""
+    return jnp.maximum(jnp.ceil(r_cols / block), 1.0).astype(jnp.int32)
+
+
+def tier_ladder(d: int, block: int = DEFAULT_BLOCK, n_tiers: int = 4,
+                r_min_blocks: int = 1) -> tuple[int, ...]:
+    """Geometric ladder of block counts; final tier is exact (R = K).
+
+    Example: d=1024, block=128 -> K=8, n_tiers=4 -> (1, 2, 4, 8).
+    The returned tuple is static (Python ints) so shapes stay static.
+    """
+    k = num_blocks(d, block)
+    ladder = []
+    r = max(1, min(r_min_blocks, k))
+    for _ in range(n_tiers - 1):
+        if r >= k:
+            break
+        ladder.append(r)
+        r *= 2
+    ladder.append(k)  # exact tier
+    return tuple(ladder)
+
+
+def assign_tiers(r_blocks: jax.Array, ladder: Sequence[int]) -> jax.Array:
+    """Smallest tier whose budget covers r_blocks (conservative rounding).
+
+    r_blocks: [..., n] int; ladder ascending; returns [..., n] int32 tier ids.
+    """
+    ladder_arr = jnp.asarray(ladder, dtype=jnp.int32)
+    # tier = first index t with ladder[t] >= r_blocks
+    tier = jnp.searchsorted(ladder_arr, r_blocks.astype(jnp.int32), side="left")
+    return jnp.minimum(tier, len(ladder) - 1).astype(jnp.int32)
+
+
+def importance_from_attention(attn: jax.Array) -> jax.Array:
+    """max_i A[..., i, j] reduced over query and head axes.
+
+    attn: [..., H, S_q, S_k] -> [..., S_k].  This is the materialized-A
+    reference path; kernels/attn_colmax.py computes the same quantity in
+    O(n) memory from (q, k, lse).
+    """
+    col = jnp.max(attn, axis=-2)            # over queries
+    if col.ndim >= 2:
+        col = jnp.max(col, axis=-2)         # over heads
+    return col
+
+
+def effective_alpha(alpha: float, delta: float = 1.0) -> float:
+    """Theorem 2 tail: with prob >= 1-delta the error is alpha*beta*||W||/delta."""
+    return alpha / delta

@@ -1,0 +1,1 @@
+from .pipeline import MemmapLM, Prefetcher, SyntheticLM, write_token_file

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the MCA hot loops (interpret-mode on CPU).
+
+The paper's own CUDA kernel is a fused gather-GEMM for the sampled
+projection; kernels here are its TPU-native counterparts (see DESIGN.md):
+  mca_matmul      block-sampled matmul, scalar-prefetch DMA gather
+  flash_attention online-softmax fwd producing LSE (the colmax enabler)
+  attn_colmax     Eq.9 r-driver: max_i A[i,j] in O(n) memory
+"""
+from .ops import attn_colmax, flash_attention, mca_matmul, mca_matmul_ragged
+
+__all__ = ["attn_colmax", "flash_attention", "mca_matmul", "mca_matmul_ragged"]

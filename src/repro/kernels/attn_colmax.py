@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: attention column-max from (q, k, lse) in O(n) memory.
+
+colmax[j] = max_i A[i, j] = max_i exp(q_i . k_j * scale - lse_i)
+
+This is the r-schedule driver of MCA (Eq. 9).  Materializing A to take a
+column max would cost O(n^2) memory and defeat flash attention; instead we
+recompute score tiles (like a flash backward pass does) and fold the max.
+Output is per query-head; the ops wrapper reduces over heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .mca_matmul import _compiler_params
+
+
+def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, cm_ref, *,
+                   scale, causal, bq, bk, nq):
+    j = pl.program_id(2)   # kv tile
+    i = pl.program_id(3)   # q tile (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        cm_ref[...] = jnp.zeros_like(cm_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        lse = lse_ref[0, 0][:, None]                         # [bq, 1]
+        a = jnp.exp(s - lse)                                 # [bq, bk]
+        if causal:
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            a = jnp.where(rows >= cols, a, 0.0)
+        cm_ref[...] = jnp.maximum(cm_ref[...],
+                                  jnp.max(a, axis=0, keepdims=True))
+
+    if causal:
+        # q tiles strictly above the kv tile see nothing of it
+        pl.when(i * bq + bq - 1 >= j * bk)(_compute)
+    else:
+        _compute()
+
+    @pl.when(i == nq - 1)
+    def _done():
+        o_ref[0, 0] = cm_ref[...][0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
+                                             "block_k", "interpret"))
+def attn_colmax(q: jax.Array, k: jax.Array, lse: jax.Array, *, scale: float,
+                causal: bool = True, block_q: int = 128, block_k: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, dh]; k: [B, Hkv, Skv, dh]; lse: [B, Hq, Sq] (from
+    flash_attention).  Returns colmax [B, Hq, Skv] float32.
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    nq, nk = sq // bq, skv // bk
+
+    grid = (b, hq, nk, nq)
+    fn = pl.pallas_call(
+        functools.partial(_colmax_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nq=nq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bb, h, j, i: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda bb, h, j, i: (bb, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bb, h, j, i: (bb, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bk), lambda bb, h, j, i: (bb, h, j)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, skv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bk), jnp.float32)],
+        compiler_params=_compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    return fn(q, k, lse)

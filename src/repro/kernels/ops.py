@@ -1,0 +1,68 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
+body executes as jnp on CPU), so the whole framework is testable offline
+while the compiled path targets TPU VMEM/MXU tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attn_colmax as _colmax_mod
+from . import flash_attention as _flash_mod
+from . import mca_matmul as _mca_mod
+from . import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mca_matmul(x: jax.Array, w: jax.Array, idx: jax.Array, inv_rp: jax.Array,
+               *, block: int = 128, block_m: int = 128, block_f: int = 128
+               ) -> jax.Array:
+    """Fixed-R Monte-Carlo block-sampled matmul (one precision tier)."""
+    m, d = x.shape
+    use_kernel = (m % min(block_m, m) == 0 and d % block == 0
+                  and w.shape[1] % min(block_f, w.shape[1]) == 0)
+    if not use_kernel:
+        return _ref.ref_mca_matmul_fixed(x, w, idx, inv_rp, block)
+    return _mca_mod.mca_matmul_fixed(
+        x, w, idx, inv_rp, block=block, block_m=block_m, block_f=block_f,
+        interpret=_interpret())
+
+
+def mca_matmul_ragged(x, w, r_tile, idx, inv_rp, *, block=128,
+                      block_m=128, block_f=128):
+    """Per-row-tile-R Monte-Carlo matmul (sorted/ragged precision)."""
+    return _mca_mod.mca_matmul_ragged(
+        x, w, r_tile, idx, inv_rp, block=block, block_m=block_m,
+        block_f=block_f, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128):
+    """Flash attention fwd; returns (out, lse)."""
+    sq, skv = q.shape[2], k.shape[2]
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    if sq % bq or skv % bk:
+        return _ref.ref_attention(q, k, v, scale=scale, causal=causal)
+    return _flash_mod.flash_attention(
+        q, k, v, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, interpret=_interpret())
+
+
+def attn_colmax(q, k, lse, *, scale, causal=True, block_q=128, block_k=128,
+                reduce_heads=True):
+    """Column max of A from (q, k, lse); optionally reduced over heads."""
+    sq, skv = q.shape[2], k.shape[2]
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    if sq % bq or skv % bk:
+        cm = _ref.ref_colmax(q, k, lse, scale=scale, causal=causal)
+    else:
+        cm = _colmax_mod.attn_colmax(
+            q, k, lse, scale=scale, causal=causal, block_q=block_q,
+            block_k=block_k, interpret=_interpret())
+    if reduce_heads:
+        cm = jnp.max(cm, axis=1)        # [B, Skv]
+    return cm

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_mca_matmul_fixed(x, w, idx, inv_rp, block=128):
+    """Oracle for mca_matmul_fixed: weighted sum of sampled block products."""
+    m, d = x.shape
+    _, f = w.shape
+    k = d // block
+    xb = x.reshape(m, k, block)
+    wb = w.reshape(k, block, f)
+    xg = jnp.take(xb, idx, axis=1)                 # [m, R, B]
+    wg = jnp.take(wb, idx, axis=0)                 # [R, B, f]
+    out = jnp.einsum("mrb,rbf,r->mf", xg.astype(jnp.float32),
+                     wg.astype(jnp.float32), inv_rp.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def ref_mca_matmul_ragged(x, w, r_tile, idx, inv_rp, block=128, block_m=128):
+    """Oracle for mca_matmul_ragged: per-row-tile prefix of the sample list."""
+    m, d = x.shape
+    _, f = w.shape
+    bm = min(block_m, m)
+    outs = []
+    for t in range(m // bm):
+        r = int(r_tile[t])
+        outs.append(ref_mca_matmul_fixed(
+            x[t * bm:(t + 1) * bm], w, idx[t, :r], inv_rp[t, :r], block))
+    return jnp.concatenate(outs, axis=0)
+
+
+def ref_attention(q, k, v, *, scale, causal=True):
+    """Materialized-A attention. q:[B,Hq,Sq,dh] k,v:[B,Hkv,Skv,dh].
+
+    Returns (out [B,Hq,Sq,dh], lse [B,Hq,Sq] f32).
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    a = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("bhqk,bhkd->bhqd", a, vr.astype(jnp.float32))
+    return out.astype(q.dtype), lse
+
+
+def ref_colmax(q, k, lse, *, scale, causal=True):
+    """Oracle for attn_colmax: max_i exp(s_ij - lse_i), per query head."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    a = jnp.exp(s - lse[..., None])
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        a = jnp.where(mask[None, None], a, 0.0)
+    return jnp.max(a, axis=2)        # over queries -> [B,Hq,Skv]

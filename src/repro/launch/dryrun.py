@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell
+on 512 placeholder devices, record memory/cost/collective analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k [--multi-pod] [--mca] [--out dryrun_results]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results are JSON-cached per cell; re-runs skip completed cells.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_config
+from repro.core.policy import MCAConfig
+from repro.dist import context as dctx
+from repro.dist import sharding as shd
+from repro.launch import hlo_analysis
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import (abstract_state, make_prefill_step,
+                              make_train_step, train_step_shardings)
+
+
+def _mca_cfg(enabled: bool) -> MCAConfig:
+    return MCAConfig(enabled=enabled, alpha=0.2, block=128,
+                     sites=("v_proj",))
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               mca: bool = False, extra_overrides=None):
+    """Returns (lowered, compiled, meta) for one cell."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(extra_overrides or {})
+    overrides.setdefault("mca", _mca_cfg(mca))
+    # "mca_<field>" overrides patch the MCAConfig (perf_iter --set)
+    import dataclasses as _dc
+    mca_patch = {k[4:]: overrides.pop(k)
+                 for k in list(overrides) if k.startswith("mca_")}
+    if mca_patch:
+        overrides["mca"] = _dc.replace(overrides["mca"], **mca_patch)
+    n_micro = overrides.pop("n_micro", 1)
+    seq_override = overrides.pop("_seq_override", None)
+    cfg, kind, specs = input_specs(arch, shape, **overrides)
+    seq, batch, _ = SHAPES[shape]
+    if seq_override is not None:
+        from repro.launch import specs as specs_mod
+        seq = seq_override
+        if kind == "train":
+            specs = specs_mod.train_specs(cfg, seq, batch)
+        elif kind == "prefill":
+            specs = specs_mod.prefill_specs(cfg, seq, batch)
+        else:
+            specs = specs_mod.decode_specs(cfg, seq, batch)
+    model = build_model(cfg)
+
+    with dctx.use_mesh(mesh):
+        a_params, a_opt = abstract_state(model)
+        p_sh = shd.param_shardings(mesh, a_params, cfg)
+        if kind == "train":
+            step = make_train_step(model, AdamWConfig(), n_micro=n_micro,
+                                   seed=0, with_mca=mca)
+            in_sh, out_sh = train_step_shardings(mesh, model, specs)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=(0, 1)
+                              ).lower(a_params, a_opt, specs)
+        elif kind == "prefill":
+            prefill = make_prefill_step(model, max_len=seq, with_mca=mca)
+            b_sh = shd.batch_shardings(mesh, specs)
+            a_out = jax.eval_shape(prefill, a_params, specs)
+            c_sh = shd.cache_shardings(mesh, a_out[0])
+            lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                              out_shardings=(c_sh, None)
+                              ).lower(a_params, specs)
+        else:  # decode
+            a_tok, a_cache, a_t = specs
+
+            def decode(params, tok, cache, t):
+                return model.decode(params, tok, cache, t)
+
+            c_sh = shd.cache_shardings(mesh, a_cache)
+            t_sh = shd.batch_shardings(mesh, a_tok)
+            lowered = jax.jit(
+                decode,
+                in_shardings=(p_sh, t_sh, c_sh, None),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            ).lower(a_params, a_tok, a_cache, a_t)
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+    return lowered, compiled, {"kind": kind, "seq": seq, "batch": batch,
+                               "compile_s": compile_s, "cfg": cfg}
+
+
+def analyze(compiled, meta, mesh_devices: int) -> dict:
+    out = {"devices": mesh_devices, **{k: meta[k] for k in
+                                       ("kind", "seq", "batch",
+                                        "compile_s")}}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        out["flops"] = float(cost.get("flops", 0.0))
+        out["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:                                   # noqa: BLE001
+        out["cost_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            if hasattr(mem, attr):
+                out[attr] = int(getattr(mem, attr))
+    except Exception as e:                                   # noqa: BLE001
+        out["memory_error"] = repr(e)
+    text = compiled.as_text()
+    out["collectives"] = hlo_analysis.collective_stats(text)
+    out["op_census"] = hlo_analysis.op_census(text)
+    out["hlo_chars"] = len(text)
+    return out
+
+
+def roofline_terms(result: dict) -> dict:
+    """Three roofline terms (seconds) from a single-device analysis."""
+    flops = result.get("flops", 0.0)
+    bytes_acc = result.get("bytes_accessed", 0.0)
+    coll = result.get("collectives", {}).get("total_bytes", 0)
+    terms = {
+        "t_compute": flops / HW["peak_bf16_flops"],
+        "t_memory": bytes_acc / HW["hbm_bw"],
+        "t_collective": coll / HW["ici_bw"],
+    }
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.startswith("t_") else -1)
+    return terms
+
+
+# ---------------------------------------------------------------- analysis
+def _depth_overrides(cfg, units: int) -> dict:
+    """Config overrides setting the repeated-stack depth to ``units``."""
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)
+        rem = cfg.n_layers % pat
+        return {"n_layers": pat * units + rem}
+    if cfg.is_encoder_decoder:
+        return {"n_layers": units, "n_encoder_layers": units}
+    return {"n_layers": units}
+
+
+def _real_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.block_pattern)
+    return cfg.n_layers
+
+
+def n_params(cfg) -> dict:
+    """Total / active / non-embedding parameter counts from eval_shape."""
+    import math
+    from repro.models import build_model
+    model = build_model(cfg)
+    a = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(a)[0]
+    total = active = embed = 0
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        total += n
+        if name == "table":
+            embed += n
+            continue
+        if cfg.n_experts and name in ("w_up", "w_gate", "w_down") \
+                and leaf.ndim >= 3:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return {"total": total, "active_nonembed": active, "embed": embed}
+
+
+def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd-only);
+    N excludes the embedding gather, includes the logits head."""
+    counts = n_params(cfg)
+    tokens = batch * (seq if kind != "decode" else 1)
+    mult = 6 if kind == "train" else 2
+    return mult * counts["active_nonembed"] * tokens
+
+
+def analyze_cell_extrapolated(arch: str, shape: str, *, mca: bool) -> dict:
+    """HLO cost via depth extrapolation: lower fully-unrolled 1- and 2-unit
+    stacks (inner scans unrolled too, so cost_analysis sees every op), fit
+    cost(L) = a + b*L, evaluate at the real depth.
+
+    For attention-free (SSM) prefill cells every cost term is linear in
+    sequence length, so the unrolled analysis runs at seq=4096 and scales
+    by S/4096 — unrolling 512 SSD chunk steps at 32k seq is compile-
+    prohibitive and adds no information."""
+    seq, batch, kind = SHAPES[shape]
+    base_cfg = get_config(arch)
+    units_real = _real_units(base_cfg)
+    seq_scale = 1.0
+    shape_ov = {}
+    if (kind == "prefill" and base_cfg.family == "ssm" and seq > 4096):
+        seq_scale = seq / 4096.0
+        shape_ov["_seq_override"] = 4096
+    results = {}
+    for units in (1, 2):
+        ov = _depth_overrides(base_cfg, units)
+        ov.update(unroll_layers=True, unroll_inner=True)
+        ov.update(shape_ov)
+        lowered, compiled, meta = lower_cell(
+            arch, shape, multi_pod=False, mca=mca, extra_overrides=ov)
+        results[units] = analyze(compiled, meta, 256)
+
+    def fit(key, sub=None):
+        v1 = results[1][key] if sub is None else results[1][key][sub]
+        v2 = results[2][key] if sub is None else results[2][key][sub]
+        if isinstance(v1, dict):
+            v1, v2 = v1["bytes"], v2["bytes"]
+        return v1 + (v2 - v1) * (units_real - 1)
+
+    out = {
+        "method": "unrolled depth extrapolation (units 1,2 -> "
+                  f"{units_real})"
+                  + (f" x seq-scale {seq_scale:.0f}" if seq_scale > 1
+                     else ""),
+        "flops": max(fit("flops"), 0.0) * seq_scale,
+        "bytes_accessed": max(fit("bytes_accessed"), 0.0) * seq_scale,
+        # units-1 constants can exceed the fit target (XLA folds more at
+        # tiny depths); clamp at the per-unit slope floor
+        "collective_bytes": max(fit("collectives", "total_bytes"), 0.0)
+        * seq_scale,
+        "per_unit": {
+            "flops": results[2]["flops"] - results[1]["flops"],
+            "bytes": (results[2]["bytes_accessed"]
+                      - results[1]["bytes_accessed"]),
+            "coll": (results[2]["collectives"]["total_bytes"]
+                     - results[1]["collectives"]["total_bytes"]),
+        },
+        "units_real": units_real,
+    }
+    out["roofline"] = roofline_terms({
+        "flops": out["flops"], "bytes_accessed": out["bytes_accessed"],
+        "collectives": {"total_bytes": out["collective_bytes"]}})
+    mf = model_flops(get_config(arch), kind, seq, batch)
+    out["model_flops_global"] = mf
+    out["model_flops_per_dev"] = mf / 256
+    out["useful_fraction"] = (out["model_flops_per_dev"]
+                              / max(out["flops"], 1.0))
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, mca: bool,
+             out_dir: str, force: bool = False) -> dict:
+    tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}" \
+          f"__{'mca' if mca else 'base'}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if "error" not in cached:
+            print(f"[skip] {tag} (cached)")
+            return cached
+    print(f"[lower+compile] {tag} ...", flush=True)
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape,
+                                             multi_pod=multi_pod, mca=mca)
+        n_dev = 512 if multi_pod else 256
+        result = analyze(compiled, meta, n_dev)
+        result["roofline_raw"] = roofline_terms(result)
+        result["cell"] = {"arch": arch, "shape": shape,
+                          "multi_pod": multi_pod, "mca": mca}
+        if not multi_pod:
+            # corrected HLO cost via depth extrapolation (scan bodies are
+            # cost-counted once; see analyze_cell_extrapolated)
+            try:
+                result["corrected"] = analyze_cell_extrapolated(
+                    arch, shape, mca=mca)
+            except Exception:                                # noqa: BLE001
+                result["corrected_error"] = traceback.format_exc()
+        print(f"  ok in {time.time() - t0:.1f}s  "
+              f"flops={result.get('flops', 0):.3e}  "
+              f"coll={result['collectives']['total_bytes']:.3e}B")
+    except Exception:                                        # noqa: BLE001
+        result = {"cell": {"arch": arch, "shape": shape,
+                           "multi_pod": multi_pod, "mca": mca},
+                  "error": traceback.format_exc()}
+        print(f"  FAILED in {time.time() - t0:.1f}s")
+        print(result["error"].splitlines()[-1])
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mca", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    args = ap.parse_args()
+
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            res = run_cell(arch, shape, multi_pod=mp, mca=args.mca,
+                           out_dir=args.out, force=args.force)
+            failures += 1 if "error" in res else 0
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Post-SPMD HLO analysis: collective bytes + op census.
+
+``compiled.as_text()`` is the per-device partitioned module, so the shapes
+on collective ops are per-device; summing their result-buffer sizes gives
+per-chip collective bytes for the roofline's collective term.
+cost_analysis() does NOT expose these — this parser is the source of truth.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: op count + summed result bytes (per device)."""
+    stats = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        rhs = rhs.strip()
+        # result type precedes the op name in "= TYPE opname("
+        for kind in COLLECTIVES:
+            # match the op name at the start of the instruction (after type)
+            m = re.search(rf"\b{kind}(?:-start|-done)?\(", rhs)
+            if m:
+                type_str = rhs[:m.start()]
+                # ignore -done (bytes counted at -start)
+                if f"{kind}-done(" in rhs:
+                    break
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _shape_bytes(type_str)
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "custom-call",
+                                  "while", "dynamic-slice",
+                                  "dynamic-update-slice", "sort")) -> Dict:
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"= \S+ {op}\(", hlo_text))
+    return out

@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (TPU v5e); multi-pod adds a leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+HW = {
+    # TPU v5e per-chip hardware constants used by the roofline model
+    "peak_bf16_flops": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link
+}

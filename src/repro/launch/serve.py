@@ -1,0 +1,61 @@
+"""Serving launcher: batched generation with the continuous batcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
+        --reduced --requests 8 --max-new 16 [--mca --alpha 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import MCAConfig
+from repro.models import build_model, reduced
+from repro.serve import ContinuousBatcher, Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--mca", action="store_true")
+    ap.add_argument("--alpha", type=float, default=0.2)
+    args = ap.parse_args()
+
+    mca = MCAConfig(enabled=args.mca, alpha=args.alpha, block=16,
+                    sites=("v_proj",))
+    cfg = get_config(args.arch, mca=mca)
+    if args.reduced:
+        cfg = reduced(cfg, mca=mca)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, batch_size=args.batch,
+                    max_len=args.max_len, mca_enabled=args.mca)
+    batcher = ContinuousBatcher(engine)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for uid in range(args.requests):
+        batcher.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
+            max_new=args.max_new))
+    done = batcher.run()
+    dt = time.time() - t0
+    tokens = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests / {tokens} tokens "
+          f"in {dt:.2f}s ({tokens / dt:.1f} tok/s)")
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid}: {done[uid][:8]}...")
+
+
+if __name__ == "__main__":
+    main()

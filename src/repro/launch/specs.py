@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: these are the shapes/dtypes the launcher feeds to
+jit(...).lower().  Shapes come from the assignment's per-arch shape sets
+(repro.configs.SHAPES)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models import build_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_specs(cfg, seq: int, batch: int) -> Dict[str, SDS]:
+    specs = {
+        "tokens": SDS((batch, seq), jnp.int32),
+        "labels": SDS((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["patches"] = SDS((batch, cfg.n_patch_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((batch, cfg.encoder_len, cfg.d_model),
+                              jnp.bfloat16)
+    return specs
+
+
+def prefill_specs(cfg, seq: int, batch: int) -> Dict[str, SDS]:
+    specs = {"tokens": SDS((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patches"] = SDS((batch, cfg.n_patch_tokens, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = SDS((batch, cfg.encoder_len, cfg.d_model),
+                              jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg, seq: int, batch: int):
+    """(tokens, cache, t) stand-ins; cache sized for a ``seq`` history."""
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    return (SDS((batch, 1), jnp.int32), cache,
+            SDS((), jnp.int32))
+
+
+def input_specs(arch: str, shape: str, **cfg_overrides
+                ) -> Tuple[object, str, dict]:
+    """Returns (cfg, kind, specs) for one dry-run cell."""
+    seq, batch, kind = SHAPES[shape]
+    cfg = get_config(arch, **cfg_overrides)
+    if kind == "train":
+        return cfg, kind, train_specs(cfg, seq, batch)
+    if kind == "prefill":
+        return cfg, kind, prefill_specs(cfg, seq, batch)
+    return cfg, kind, decode_specs(cfg, seq, batch)

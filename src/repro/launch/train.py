@@ -1,0 +1,95 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b \
+        --steps 200 --batch 32 --seq 1024 [--mca --alpha 0.2] \
+        [--mesh data,model] [--n-micro 4] [--ckpt-dir ckpts/run1]
+
+On a real TPU fleet this binary runs per-host under `jax.distributed`
+initialization; on CPU it trains reduced configs for smoke/examples.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_config
+from repro.core.policy import MCAConfig
+from repro.data import SyntheticLM
+from repro.dist import context as dctx
+from repro.models import build_model, reduced
+from repro.optim import adamw
+from repro.train import Trainer, TrainerConfig
+from repro.train.step import jit_train_step, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--mca", action="store_true")
+    ap.add_argument("--alpha", type=float, default=0.2)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke-size) config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-file", default=None,
+                    help="optional memmap token file (data/write_token_file)")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    mca = MCAConfig(enabled=args.mca, alpha=args.alpha, sites=("v_proj",))
+    cfg = get_config(args.arch, mca=mca)
+    if args.reduced:
+        cfg = reduced(cfg, mca=mca if not args.mca else
+                      MCAConfig(enabled=True, alpha=args.alpha, block=16,
+                                sites=("v_proj",)))
+    model = build_model(cfg)
+
+    if args.data_file:
+        from repro.data import MemmapLM
+        data = MemmapLM(args.data_file, cfg.vocab_size, args.seq,
+                        args.batch, seed=args.seed)
+    else:
+        data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
+                           seed=args.seed)
+
+    opt_cfg = adamw.AdamWConfig(
+        lr=args.lr, schedule=adamw.cosine_schedule(
+            warmup=max(args.steps // 20, 1), total=args.steps))
+
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+        with dctx.use_mesh(mesh):
+            batch0 = jax.tree.map(jax.numpy.asarray, data.batch(0))
+            step = jit_train_step(mesh, model, opt_cfg,
+                                  jax.eval_shape(lambda: batch0),
+                                  n_micro=args.n_micro, seed=args.seed)
+            _run(model, opt_cfg, data, step, args)
+    else:
+        step = jax.jit(make_train_step(model, opt_cfg, n_micro=args.n_micro,
+                                       seed=args.seed),
+                       donate_argnums=(0, 1))
+        _run(model, opt_cfg, data, step, args)
+
+
+def _run(model, opt_cfg, data, step, args):
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, log_every=10)
+    trainer = Trainer(model, opt_cfg, data, step, tcfg)
+    out = trainer.run()
+    print(f"finished {out['steps']} steps in {out['wall_s']:.1f}s; "
+          f"final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

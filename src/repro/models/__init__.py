@@ -1,0 +1,5 @@
+"""Model zoo: layers + stacks for all assigned architectures."""
+from .api import Model, build_model
+from .config import ModelConfig, reduced
+
+__all__ = ["Model", "ModelConfig", "build_model", "reduced"]

@@ -1,0 +1,520 @@
+"""Top-level model API: build_model(cfg) -> Model(init/loss/prefill/decode).
+
+Every assigned architecture is served through this one API; the launcher,
+trainer, server, benchmarks and dry-run all consume Model objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import rglru, ssm, stack
+from .common import (apply_norm, dense_init, embed_tokens, init_embedding,
+                     init_norm, maybe_scan, sinusoidal_pos_emb)
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable          # (params, batch, key|None) -> (loss, metrics)
+    forward_hidden: Callable
+    prefill: Callable       # (params, batch, max_len, key|None) -> (cache, hid)
+    decode: Callable        # (params, tokens, cache, t) -> (logits, cache)
+    init_cache: Callable    # (batch, max_len) -> cache pytree
+
+
+# ------------------------------------------------------------------ loss
+def chunked_xent(hidden, head, labels, cfg):
+    """Sequence-chunked vocab-masked cross entropy.
+
+    hidden: [B, S, d]; head: [d, Vp]; labels: [B, S] int32 (-1 = ignore).
+    Keeps the [B, chunk, Vp] logits buffer bounded so 256k vocabs fit.
+    """
+    b, s, d = hidden.shape
+    vp = head.shape[-1]
+    chunk = attn.pick_chunk(s, cfg.logits_chunk)
+    nc = s // chunk
+    vocab_ok = (jnp.arange(vp) < cfg.vocab_size)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        h_c, y_c = inp                                     # [B,c,d], [B,c]
+        logits = jnp.einsum("bcd,dv->bcv", h_c.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        logits = jnp.where(vocab_ok[None, None], logits, NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (y_c >= 0).astype(jnp.float32)
+        tot += jnp.sum((lse - ll) * mask)
+        cnt += jnp.sum(mask)
+        return (tot, cnt), None
+
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    (tot, cnt), _ = maybe_scan(jax.checkpoint(step),
+                               (jnp.zeros(()), jnp.zeros(())),
+                               (hs, ys), cfg.unroll_inner)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _head(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]
+
+
+def _logits(params, cfg, hidden):
+    logits = jnp.einsum("...d,dv->...v", hidden.astype(jnp.float32),
+                        _head(params, cfg).astype(jnp.float32))
+    vp = logits.shape[-1]
+    return jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, NEG_INF)
+
+
+# ==================================================== decoder-only LM ====
+def _init_lm(key, cfg):
+    ks = jax.random.split(key, 4)
+    kind = stack.layer_kind(cfg)
+    params = {"embed": init_embedding(ks[0], cfg),
+              "final_norm": init_norm(cfg)}
+    if cfg.family == "hybrid":
+        params["layers"] = stack.init_hybrid(ks[1], cfg)
+    else:
+        params["layers"] = stack.init_stack(ks[1], cfg, cfg.n_layers, kind)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                       cfg.jnp_dtype)
+    if cfg.family == "vlm":
+        params["patch_proj"] = dense_init(ks[3], cfg.d_model, cfg.d_model,
+                                          cfg.jnp_dtype)
+    return params
+
+
+def _lm_embed(params, cfg, batch):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "patches" in batch:
+        px = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+    if cfg.add_sinusoidal_pos:
+        x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model, x.dtype)[None]
+    return x
+
+
+def _lm_hidden(params, cfg, batch, mca_key):
+    x = _lm_embed(params, cfg, batch)
+    pos = jnp.arange(x.shape[1])[None]
+    if cfg.family == "hybrid":
+        x, aux, stats = stack.hybrid_forward(params["layers"], cfg, x,
+                                             pos=pos, mca_key=mca_key)
+    else:
+        x, aux, stats = stack.stack_forward(
+            params["layers"], cfg, x, pos=pos, mca_key=mca_key,
+            kind=stack.layer_kind(cfg))
+    x = apply_norm(params["final_norm"], cfg, x)
+    return x, aux, stats
+
+
+def _lm_loss(params, cfg, batch, mca_key=None):
+    hidden, aux, stats = _lm_hidden(params, cfg, batch, mca_key)
+    if cfg.family == "vlm" and "patches" in batch:
+        hidden = hidden[:, batch["patches"].shape[1]:]
+    loss = chunked_xent(hidden, _head(params, cfg), batch["labels"], cfg)
+    metrics = {"loss": loss, "aux_loss": aux,
+               "mca_exact_flops": stats["exact_flops"],
+               "mca_flops": stats["mca_flops"]}
+    return loss + aux, metrics
+
+
+# ----------------------------------------------------------- cache utils
+def _pad_seq_cache(arr, slots: int):
+    """arr: [B, S, ...] -> ([B, slots, ...], slot_pos [slots])."""
+    b, s = arr.shape[0], arr.shape[1]
+    if slots >= s:                                   # global cache
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, slots - s)
+        out = jnp.pad(arr, pad)
+        slot_pos = jnp.where(jnp.arange(slots) < s,
+                             jnp.arange(slots), -1).astype(jnp.int32)
+    else:                                            # rolling window cache
+        tail = arr[:, s - slots:]
+        pos = jnp.arange(s - slots, s)
+        slot = pos % slots
+        out = jnp.zeros((b, slots) + arr.shape[2:], arr.dtype
+                        ).at[:, slot].set(tail)
+        slot_pos = jnp.zeros((slots,), jnp.int32).at[slot].set(pos)
+    return out, slot_pos
+
+
+def _gqa_prefill_cache(cfg, k, v, max_len, window):
+    slots = window if window > 0 else max_len
+    kc, slot_pos = _pad_seq_cache(k, slots)
+    vc, _ = _pad_seq_cache(v, slots)
+    return {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+# -------------------------------------------------- LM prefill / decode
+def _lm_prefill(params, cfg, batch, max_len, mca_key=None):
+    """Run the full prompt, return (cache, last_hidden)."""
+    x = _lm_embed(params, cfg, batch)
+    pos = jnp.arange(x.shape[1])[None]
+    kind = stack.layer_kind(cfg)
+
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(params, cfg, x, pos, max_len, mca_key)
+
+    def body(carry, inp):
+        xx = carry
+        p_l, idx = inp
+        key_l = None if mca_key is None else jax.random.fold_in(mca_key, idx)
+        h = apply_norm(p_l["ln1"], cfg, xx)
+        if kind == "ssm":
+            y, state, conv_tail = ssm.mamba2_forward(p_l["mixer"], cfg, h,
+                                                     return_state=True)
+            xx = xx + y
+            cache_l = {"state": state, "conv": conv_tail}
+        elif cfg.attn_type == "mla":
+            y, (ckv, kr), _, _ = attn.mla_attention(
+                p_l["mixer"], cfg, h, pos=pos, mca_key=key_l,
+                return_cache=True)
+            xx = xx + y
+            ckv_p, _ = _pad_seq_cache(ckv, max_len)
+            kr_p, _ = _pad_seq_cache(kr, max_len)
+            cache_l = {"ckv": ckv_p, "kr": kr_p}
+        else:
+            y, (k, v), _, _ = attn.gqa_attention(
+                p_l["mixer"], cfg, h, pos=pos, mca_key=key_l,
+                return_kv=True)
+            xx = xx + y
+            cache_l = _gqa_prefill_cache(cfg, k, v, max_len, cfg.window)
+        if kind != "ssm":
+            h = apply_norm(p_l["ln2"], cfg, xx)
+            if kind == "attn_moe":
+                y, _, _ = ffn_mod.moe_ffn(p_l["ffn"], cfg, h,
+                                          mca_key=key_l)
+            else:
+                y = ffn_mod.ffn(p_l["ffn"], cfg, h)
+            xx = xx + y
+        return xx, cache_l
+
+    x, caches = maybe_scan(
+        body, x, (params["layers"], jnp.arange(cfg.n_layers)),
+        cfg.unroll_layers)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return {"layers": caches}, x
+
+
+def _decode_layer(p_l, cfg, xx, cache_l, t, kind):
+    h = apply_norm(p_l["ln1"], cfg, xx)
+    if kind == "ssm":
+        y, cache_l = ssm.mamba2_decode(p_l["mixer"], cfg, h, cache_l)
+        return xx + y, cache_l
+    if kind == "rec_ffn":
+        y, cache_l = rglru.recurrent_decode(p_l["mixer"], cfg, h, cache_l)
+        xx = xx + y
+    elif cfg.attn_type == "mla":
+        y, cache_l, _ = attn.mla_decode(p_l["mixer"], cfg, h, cache_l, t=t)
+        xx = xx + y
+    else:
+        y, cache_l, _ = attn.gqa_decode(p_l["mixer"], cfg, h, cache_l, t=t)
+        xx = xx + y
+    h = apply_norm(p_l["ln2"], cfg, xx)
+    if kind == "attn_moe":
+        y, _, _ = ffn_mod.moe_ffn(p_l["ffn"], cfg, h)
+    else:
+        y = ffn_mod.ffn(p_l["ffn"], cfg, h)
+    return xx + y, cache_l
+
+
+def _lm_decode(params, cfg, tokens, cache, t):
+    """tokens: [B, 1]; t: scalar int32. Returns (logits, cache)."""
+    x = embed_tokens(params["embed"], tokens)
+    kind = stack.layer_kind(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_decode(params, cfg, x, cache, t)
+
+    def body(xx, inp):
+        p_l, cache_l = inp
+        xx, new_cache = _decode_layer(p_l, cfg, xx, cache_l, t, kind)
+        return xx, new_cache
+
+    x, new_caches = maybe_scan(body, x, (params["layers"],
+                                         cache["layers"]),
+                               cfg.unroll_layers)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return _logits(params, cfg, x), {"layers": new_caches}
+
+
+def _lm_init_cache(cfg, batch, max_len):
+    kind = stack.layer_kind(cfg)
+    dt = cfg.jnp_dtype
+
+    def one():
+        if kind == "ssm":
+            return ssm.init_mamba2_cache(cfg, batch, dt)
+        if cfg.attn_type == "mla":
+            return attn.init_mla_cache(cfg, batch, max_len, dt)
+        return attn.init_gqa_cache(cfg, batch, max_len, dt)
+
+    caches = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
+    return {"layers": caches}
+
+
+# ------------------------------------------------------- hybrid variants
+def _hybrid_prefill(params, cfg, x, pos, max_len, mca_key):
+    n_groups, pat, rem = stack.hybrid_layout(cfg)
+
+    def make_cache(p_l, xx, kind, key_l):
+        h = apply_norm(p_l["ln1"], cfg, xx)
+        if kind == "rec_ffn":
+            y, conv_tail, h_fin = rglru.recurrent_block_with_state(
+                p_l["mixer"], cfg, h)
+            xx = xx + y
+            cache_l = {"h": h_fin, "conv": conv_tail}
+        else:
+            y, (k, v), _, _ = attn.gqa_attention(
+                p_l["mixer"], cfg, h, pos=pos, mca_key=key_l,
+                window=cfg.window, return_kv=True)
+            xx = xx + y
+            cache_l = _gqa_prefill_cache(cfg, k, v, max_len, cfg.window)
+        h = apply_norm(p_l["ln2"], cfg, xx)
+        xx = xx + ffn_mod.ffn(p_l["ffn"], cfg, h)
+        return xx, cache_l
+
+    def body(xx, inp):
+        gp, gidx = inp
+        caches = {}
+        for i, kind in enumerate(pat):
+            key_l = None if mca_key is None else jax.random.fold_in(
+                mca_key, gidx * len(pat) + i)
+            xx, caches[f"pos{i}"] = make_cache(gp[f"pos{i}"], xx, kind, key_l)
+        return xx, caches
+
+    x, gcaches = maybe_scan(body, x, (params["layers"]["groups"],
+                                      jnp.arange(n_groups)),
+                            cfg.unroll_layers)
+    rem_caches = []
+    for i, kind in enumerate(rem):
+        key_l = None if mca_key is None else jax.random.fold_in(
+            mca_key, n_groups * len(pat) + i)
+        x, c = make_cache(params["layers"]["rem"][i], x, kind, key_l)
+        rem_caches.append(c)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return {"groups": gcaches, "rem": rem_caches}, x
+
+
+def _hybrid_decode(params, cfg, x, cache, t):
+    n_groups, pat, rem = stack.hybrid_layout(cfg)
+
+    def body(xx, inp):
+        gp, gc = inp
+        new_c = {}
+        for i, kind in enumerate(pat):
+            xx, new_c[f"pos{i}"] = _decode_layer(gp[f"pos{i}"], cfg, xx,
+                                                 gc[f"pos{i}"], t, kind)
+        return xx, new_c
+
+    x, gcaches = maybe_scan(body, x, (params["layers"]["groups"],
+                                      cache["groups"]),
+                            cfg.unroll_layers)
+    rem_caches = []
+    for i, kind in enumerate(rem):
+        x, c = _decode_layer(params["layers"]["rem"][i], cfg, x,
+                             cache["rem"][i], t, kind)
+        rem_caches.append(c)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return _logits(params, cfg, x), {"groups": gcaches, "rem": rem_caches}
+
+
+def _hybrid_init_cache(cfg, batch, max_len):
+    n_groups, pat, rem = stack.hybrid_layout(cfg)
+    dt = cfg.jnp_dtype
+
+    def one(kind):
+        if kind == "rec_ffn":
+            return rglru.init_recurrent_cache(cfg, batch, dt)
+        return attn.init_gqa_cache(cfg, batch, max_len, dt)
+
+    groups = {
+        f"pos{i}": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[one(kind) for _ in range(n_groups)])
+        for i, kind in enumerate(pat)}
+    return {"groups": groups, "rem": [one(k) for k in rem]}
+
+
+# ====================================================== encoder-decoder ==
+def _init_encdec(key, cfg):
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": init_embedding(ks[0], cfg),
+        "enc_layers": stack.init_stack(ks[1], cfg, cfg.n_encoder_layers,
+                                       "attn_ffn"),
+        "enc_norm": init_norm(cfg),
+        "dec_layers": stack.init_stack(ks[2], cfg, cfg.n_layers,
+                                       "dec_attn_ffn"),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], cfg.d_model, cfg.padded_vocab,
+                                       cfg.jnp_dtype)
+    return params
+
+
+def _encode(params, cfg, frames, mca_key):
+    x = frames.astype(cfg.jnp_dtype)
+    x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model,
+                               x.dtype)[None]
+    pos = jnp.arange(x.shape[1])[None]
+    x, _, stats = stack.stack_forward(
+        params["enc_layers"], cfg, x, pos=pos, mca_key=mca_key,
+        kind="attn_ffn", causal=False, window=0)
+    return apply_norm(params["enc_norm"], cfg, x), stats
+
+
+def _encdec_hidden(params, cfg, batch, mca_key):
+    enc_key = None if mca_key is None else jax.random.fold_in(mca_key, 101)
+    enc_out, enc_stats = _encode(params, cfg, batch["frames"], enc_key)
+    x = embed_tokens(params["embed"], batch["tokens"])
+    x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model, x.dtype)[None]
+    pos = jnp.arange(x.shape[1])[None]
+    x, aux, stats = stack.stack_forward(
+        params["dec_layers"], cfg, x, pos=pos, mca_key=mca_key,
+        kind="dec_attn_ffn", enc_out=enc_out, causal=True, window=0)
+    stats = {k: stats[k] + enc_stats[k] for k in stats}
+    x = apply_norm(params["final_norm"], cfg, x)
+    return x, aux, stats, enc_out
+
+
+def _encdec_loss(params, cfg, batch, mca_key=None):
+    hidden, aux, stats, _ = _encdec_hidden(params, cfg, batch, mca_key)
+    loss = chunked_xent(hidden, _head(params, cfg), batch["labels"], cfg)
+    return loss + aux, {"loss": loss, "aux_loss": aux,
+                        "mca_exact_flops": stats["exact_flops"],
+                        "mca_flops": stats["mca_flops"]}
+
+
+def _encdec_prefill(params, cfg, batch, max_len, mca_key=None):
+    enc_key = None if mca_key is None else jax.random.fold_in(mca_key, 101)
+    enc_out, _ = _encode(params, cfg, batch["frames"], enc_key)
+    x = embed_tokens(params["embed"], batch["tokens"])
+    x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model, x.dtype)[None]
+    pos = jnp.arange(x.shape[1])[None]
+
+    def body(xx, inp):
+        p_l, idx = inp
+        key_l = None if mca_key is None else jax.random.fold_in(mca_key, idx)
+        h = apply_norm(p_l["ln1"], cfg, xx)
+        y, (k, v), _, _ = attn.gqa_attention(p_l["mixer"], cfg, h, pos=pos,
+                                             mca_key=key_l, return_kv=True)
+        xx = xx + y
+        self_cache = _gqa_prefill_cache(cfg, k, v, max_len, 0)
+        h = apply_norm(p_l["ln_x"], cfg, xx)
+        y, (ck, cv), _, _ = attn.gqa_attention(
+            p_l["cross"], cfg, h, pos=pos, mca_key=key_l, causal=False,
+            window=0, kv_x=enc_out, return_kv=True)
+        xx = xx + y
+        h = apply_norm(p_l["ln2"], cfg, xx)
+        xx = xx + ffn_mod.ffn(p_l["ffn"], cfg, h)
+        return xx, {"self": self_cache, "cross_k": ck, "cross_v": cv}
+
+    x, caches = maybe_scan(body, x, (params["dec_layers"],
+                                     jnp.arange(cfg.n_layers)),
+                           cfg.unroll_layers)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return {"layers": caches}, x
+
+
+def _cross_decode(p, cfg, x, ck, cv):
+    """One-query cross attention against cached encoder K/V."""
+    b = x.shape[0]
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    dh = cfg.d_head
+    q = (x @ p["wq"]).reshape(b, 1, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", q, ck,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", a.astype(cv.dtype), cv)
+    return out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"]
+
+
+def _encdec_decode(params, cfg, tokens, cache, t):
+    x = embed_tokens(params["embed"], tokens)
+    pe = sinusoidal_pos_emb(cache["layers"]["self"]["k"].shape[2],
+                            cfg.d_model, x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, t, 1)[None]
+
+    def body(xx, inp):
+        p_l, cache_l = inp
+        h = apply_norm(p_l["ln1"], cfg, xx)
+        y, new_self, _ = attn.gqa_decode(p_l["mixer"], cfg, h,
+                                         cache_l["self"], t=t)
+        xx = xx + y
+        h = apply_norm(p_l["ln_x"], cfg, xx)
+        xx = xx + _cross_decode(p_l["cross"], cfg, h, cache_l["cross_k"],
+                                cache_l["cross_v"])
+        h = apply_norm(p_l["ln2"], cfg, xx)
+        xx = xx + ffn_mod.ffn(p_l["ffn"], cfg, h)
+        return xx, {"self": new_self, "cross_k": cache_l["cross_k"],
+                    "cross_v": cache_l["cross_v"]}
+
+    x, new_caches = maybe_scan(body, x, (params["dec_layers"],
+                                         cache["layers"]),
+                               cfg.unroll_layers)
+    x = apply_norm(params["final_norm"], cfg, x)
+    return _logits(params, cfg, x), {"layers": new_caches}
+
+
+def _encdec_init_cache(cfg, batch, max_len):
+    dt = cfg.jnp_dtype
+
+    def one():
+        return {
+            "self": attn.init_gqa_cache(cfg, batch, max_len, dt),
+            "cross_k": jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads,
+                                  cfg.d_head), dt),
+            "cross_v": jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads,
+                                  cfg.d_head), dt),
+        }
+
+    caches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[one() for _ in range(cfg.n_layers)])
+    return {"layers": caches}
+
+
+# ================================================================ factory
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda key: _init_encdec(key, cfg),
+            loss=lambda p, b, key=None: _encdec_loss(p, cfg, b, key),
+            forward_hidden=lambda p, b, key=None: _encdec_hidden(
+                p, cfg, b, key)[:3],
+            prefill=lambda p, b, max_len, key=None: _encdec_prefill(
+                p, cfg, b, max_len, key),
+            decode=lambda p, tok, cache, t: _encdec_decode(
+                p, cfg, tok, cache, t),
+            init_cache=lambda batch, max_len: _encdec_init_cache(
+                cfg, batch, max_len),
+        )
+    init_cache = (_hybrid_init_cache if cfg.family == "hybrid"
+                  else _lm_init_cache)
+    return Model(
+        cfg=cfg,
+        init=lambda key: _init_lm(key, cfg),
+        loss=lambda p, b, key=None: _lm_loss(p, cfg, b, key),
+        forward_hidden=lambda p, b, key=None: _lm_hidden(p, cfg, b, key),
+        prefill=lambda p, b, max_len, key=None: _lm_prefill(
+            p, cfg, b, max_len, key),
+        decode=lambda p, tok, cache, t: _lm_decode(p, cfg, tok, cache, t),
+        init_cache=lambda batch, max_len: init_cache(cfg, batch, max_len),
+    )

@@ -1,0 +1,693 @@
+"""Attention: memory-efficient chunked softmax attention (pure JAX, XLA-
+lowerable on any backend) with the MCA hooks, plus GQA / MLA modules and
+KV-cache decode paths.
+
+Layout convention: activations are [B, S, H, dh] (seq-major); GQA never
+materializes repeated KV (einsum over grouped heads).
+
+The chunked two-pass structure mirrors kernels/flash_attention.py +
+kernels/attn_colmax.py; on TPU the Pallas kernels replace passes 1+2 (the
+wrapper picks the implementation), on CPU/dry-run the lax.scan path lowers
+to HLO that XLA pipelines, with identical FLOPs/bytes structure.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import MCAConfig, mca_project
+from repro.dist.context import (DP, constrain, constrain_heads,
+                                get_mesh)
+from .common import apply_rope, dense_init, maybe_scan, rmsnorm
+
+NEG_INF = -1e30
+
+
+def pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target."""
+    c = min(target, s)
+    while s % c != 0:
+        c -= 1
+    return c
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    """qpos: [Sq], kpos: [C] -> bool [Sq, C] (True = attend)."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def _scores(q, k_chunk, scale):
+    """q: [B,Sq,Hkv,G,dh]; k_chunk: [B,C,Hkv,dh] -> [B,Hkv,G,Sq,C] f32."""
+    return jnp.einsum("bqhgd,bchd->bhgqc", q, k_chunk,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _kv_chunks(x, chunk):
+    b, s, h, d = x.shape
+    return jnp.moveaxis(x.reshape(b, s // chunk, chunk, h, d), 1, 0)
+
+
+# --------------------------------------------------------- chunked passes
+def chunked_lse(q, k, *, scale, causal, window, chunk, q_offset=0,
+                unroll=False):
+    """Pass 1: per-query (m, lse). q: [B,Sq,Hkv,G,dh]; k: [B,Skv,Hkv,dh].
+
+    Returns (m, lse), each [B,Hkv,G,Sq] float32.
+    """
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    qpos = q_offset + jnp.arange(sq)
+    kcs = _kv_chunks(k, chunk)
+
+    def step(carry, inp):
+        m, l = carry
+        ci, kc = inp
+        s = _scores(q, kc, scale)
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
+                      s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(s - m_new[..., None]),
+                                             axis=-1)
+        return (m_new, l), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (m, l), _ = maybe_scan(jax.checkpoint(step), (m0, l0),
+                           (jnp.arange(skv // chunk), kcs), unroll)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    return m, m + jnp.log(safe_l)
+
+
+def chunked_colmax(q, k, lse, *, scale, causal, window, chunk,
+                   q_offset=0, unroll=False):
+    """max_i A[i, j] given lse — the Eq. 9 driver. Returns [B, Skv] f32."""
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    qpos = q_offset + jnp.arange(sq)
+    kcs = _kv_chunks(k, chunk)
+
+    def step(_, inp):
+        ci, kc = inp
+        s = _scores(q, kc, scale)
+        a = jnp.exp(s - lse[..., None])
+        kpos = ci * chunk + jnp.arange(chunk)
+        a = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
+                      a, 0.0)
+        return None, jnp.max(a, axis=(1, 2, 3))        # -> [B, C]
+
+    _, cms = maybe_scan(jax.checkpoint(step), None,
+                        (jnp.arange(skv // chunk), kcs), unroll)
+    return jnp.moveaxis(cms, 0, 1).reshape(b, skv)
+
+
+def chunked_av(q, k, v, lse, *, scale, causal, window, chunk,
+               q_offset=0, unroll=False):
+    """Pass 2: O = A @ V given lse. Returns [B,Sq,Hkv,G,dv] in v.dtype.
+    (dv may differ from the q/k head dim, e.g. MLA.)"""
+    b, sq, hkv, g, _ = q.shape
+    dv = v.shape[-1]
+    skv = k.shape[1]
+    qpos = q_offset + jnp.arange(sq)
+    kcs = _kv_chunks(k, chunk)
+    vcs = _kv_chunks(v, chunk)
+
+    def step(acc, inp):
+        ci, kc, vc = inp
+        s = _scores(q, kc, scale)
+        a = jnp.exp(s - lse[..., None])
+        kpos = ci * chunk + jnp.arange(chunk)
+        a = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
+                      a, 0.0)
+        acc += jnp.einsum("bhgqc,bchd->bqhgd", a.astype(v.dtype), vc,
+                          preferred_element_type=jnp.float32)
+        return acc, None
+
+    acc0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    acc, _ = maybe_scan(jax.checkpoint(step), acc0,
+                        (jnp.arange(skv // chunk), kcs, vcs), unroll)
+    return acc.astype(v.dtype)
+
+
+def onepass_attention(q, k, v, *, scale, causal, window, chunk,
+                      q_offset=0, unroll=False):
+    """Single-pass online-softmax attention (no colmax). Returns
+    (out [B,Sq,Hkv,G,dv], m, lse)."""
+    b, sq, hkv, g, _ = q.shape
+    dv = v.shape[-1]
+    skv = k.shape[1]
+    qpos = q_offset + jnp.arange(sq)
+    kcs = _kv_chunks(k, chunk)
+    vcs = _kv_chunks(v, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kc, vc = inp
+        s = _scores(q, kc, scale)
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
+                      s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        # correction broadcast to [B,Sq,Hkv,G,1]
+        corr_b = jnp.moveaxis(corr, -1, 1)[..., None]
+        acc = acc * corr_b + jnp.einsum(
+            "bhgqc,bchd->bqhgd", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    (m, l, acc), _ = maybe_scan(jax.checkpoint(step), (m0, l0, acc0),
+                                (jnp.arange(skv // chunk), kcs, vcs), unroll)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / jnp.moveaxis(safe_l, -1, 1)[..., None]
+    return out.astype(v.dtype), m, m + jnp.log(safe_l)
+
+
+def chunked_lse_colmax_fused(q, k, *, scale, causal, window, chunk,
+                             q_offset=0, unroll=False):
+    """One-pass lse + CONSERVATIVE colmax (beyond-paper optimization).
+
+    True colmax needs the final lse (a second O(S^2) sweep). Folding
+    max_i exp(s_ij - lse_running_i) during pass 1 uses a *partial* lse
+    (<= final), so the result OVERestimates every column max: Eq.9 then
+    allocates at least as many samples as the exact schedule and the
+    Theorem-2 bound is preserved — at zero extra score sweeps.
+
+    Returns (m, lse, colmax_over [B,Skv])."""
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    qpos = q_offset + jnp.arange(sq)
+    kcs = _kv_chunks(k, chunk)
+
+    def step(carry, inp):
+        m, l = carry
+        ci, kc = inp
+        s = _scores(q, kc, scale)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = _mask(qpos, kpos, causal, window)[None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(s - m_new[..., None]),
+                                             axis=-1)
+        lse_run = m_new + jnp.log(jnp.where(l == 0, 1.0, l))
+        a_over = jnp.exp(s - lse_run[..., None])
+        a_over = jnp.where(mask, a_over, 0.0)
+        cm = jnp.max(a_over, axis=(1, 2, 3))           # [B, C]
+        return (m_new, l), cm
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (m, l), cms = maybe_scan(jax.checkpoint(step), (m0, l0),
+                             (jnp.arange(skv // chunk), kcs), unroll)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    colmax = jnp.minimum(jnp.moveaxis(cms, 0, 1).reshape(b, skv), 1.0)
+    return m, m + jnp.log(safe_l), colmax
+
+
+# ------------------------------------------------------- banded (local)
+def _band_starts(sq, window, cq):
+    band = window + cq
+    idx = jnp.arange(sq // cq)
+    return jnp.clip((idx + 1) * cq - band, 0, None), band
+
+
+def banded_lse_colmax(q, k, *, scale, window, chunk_q, unroll=False):
+    """Local-attention pass over gathered KV bands: each query chunk of
+    size Cq attends only its [qpos-W, qpos] band (length W+Cq), so no
+    out-of-window score is ever computed — O(S*(W+Cq)) instead of O(S^2).
+
+    Because the band covers every key a query may attend, lse is final in
+    ONE pass and colmax comes for free (exp(s - lse) folded per band with
+    a scatter-max over key positions).
+
+    Returns (m, lse [B,Hkv,G,Sq], colmax [B,Skv])."""
+    b, sq, hkv, g, dh = q.shape
+    starts, band = _band_starts(sq, window, chunk_q)
+    nc = sq // chunk_q
+
+    def step(_, inp):
+        i, start = inp
+        qs = jax.lax.dynamic_slice_in_dim(q, i * chunk_q, chunk_q, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        s = _scores(qs, kb, scale)                   # [B,hkv,g,Cq,band]
+        qpos = i * chunk_q + jnp.arange(chunk_q)
+        kpos = start + jnp.arange(band)
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (qpos[:, None] - kpos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        l = jnp.sum(jnp.exp(s - m[..., None]), axis=-1)
+        lse = m + jnp.log(jnp.where(l == 0, 1.0, l))
+        a = jnp.exp(s - lse[..., None])
+        a = jnp.where(mask[None, None, None], a, 0.0)
+        cm_band = jnp.max(a, axis=(1, 2, 3))         # [B, band]
+        return None, (m, lse, cm_band)
+
+    _, (ms, lses, cms) = maybe_scan(step, None,
+                                    (jnp.arange(nc), starts), unroll)
+    m = jnp.moveaxis(ms, 0, -2).reshape(b, hkv, g, sq)
+    lse = jnp.moveaxis(lses, 0, -2).reshape(b, hkv, g, sq)
+    # scatter-max band colmaxes onto absolute key positions
+    kpos = starts[:, None] + jnp.arange(band)[None, :]       # [nc, band]
+    colmax = jnp.zeros((b, sq), jnp.float32).at[
+        :, kpos.reshape(-1)].max(
+        jnp.moveaxis(cms, 0, 1).reshape(b, -1))
+    return m, lse, colmax
+
+
+def banded_av(q, k, v, lse, *, scale, window, chunk_q, unroll=False):
+    """O = A @ V over gathered bands given final lse."""
+    b, sq, hkv, g, dh = q.shape
+    dv = v.shape[-1]
+    starts, band = _band_starts(sq, window, chunk_q)
+    nc = sq // chunk_q
+
+    def step(_, inp):
+        i, start = inp
+        qs = jax.lax.dynamic_slice_in_dim(q, i * chunk_q, chunk_q, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        s = _scores(qs, kb, scale)
+        qpos = i * chunk_q + jnp.arange(chunk_q)
+        kpos = start + jnp.arange(band)
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (qpos[:, None] - kpos[None, :] < window)
+        lse_c = jax.lax.dynamic_slice_in_dim(lse, i * chunk_q, chunk_q,
+                                             axis=-1)
+        a = jnp.exp(s - lse_c[..., None])
+        a = jnp.where(mask[None, None, None], a, 0.0)
+        out = jnp.einsum("bhgqc,bchd->bqhgd", a.astype(v.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        return None, out.astype(v.dtype)
+
+    _, outs = maybe_scan(step, None, (jnp.arange(nc), starts), unroll)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, dv)
+
+
+def banded_onepass(q, k, v, *, scale, window, chunk_q, unroll=False):
+    """MCA-off local attention: out + (m, lse) over bands (two cheap
+    band passes; still ~W/S of the full-scores cost)."""
+    m, lse, _ = banded_lse_colmax(q, k, scale=scale, window=window,
+                                  chunk_q=chunk_q, unroll=unroll)
+    out = banded_av(q, k, v, lse, scale=scale, window=window,
+                    chunk_q=chunk_q, unroll=unroll)
+    return out, m, lse
+
+
+def _use_banded(cfg, window, skv, causal, kv_x):
+    cq = pick_chunk(skv, cfg.attn_chunk)
+    return (cfg.banded_local and window > 0 and causal and kv_x is None
+            and skv % cq == 0 and skv >= window + cq)
+
+
+# ------------------------------------------------------------ GQA module
+def init_gqa(key, cfg):
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.d_head, dt),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dt),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, cfg.d_model, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.d_head,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.d_head,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _zero_stats():
+    return {"exact_flops": jnp.zeros((), jnp.float32),
+            "mca_flops": jnp.zeros((), jnp.float32)}
+
+
+def _acc_stats(acc, s):
+    return {"exact_flops": acc["exact_flops"] + jnp.asarray(
+                s["exact_flops"], jnp.float32),
+            "mca_flops": acc["mca_flops"] + jnp.asarray(
+                s["mca_flops"], jnp.float32)}
+
+
+def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
+                  window=None, kv_x=None, return_kv=False):
+    """Full-sequence (train / prefill) GQA attention with MCA on V/O.
+
+    x: [B, S, d]; kv_x: cross-attention source (defaults to x);
+    Returns (y, kv_or_None, stats).
+    """
+    causal = cfg.causal if causal is None else causal
+    window = cfg.window if window is None else window
+    b, sq, d = x.shape
+    src = x if kv_x is None else kv_x
+    skv = src.shape[1]
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    dh = cfg.d_head
+    scale = dh ** -0.5
+    stats = _zero_stats()
+    # TP-friendly head grouping: when KV heads can't shard over "model" but
+    # the full q-head count can, repeat KV to H heads (g=1) so the single
+    # head dim shards cleanly (Megatron GQA-TP; repeat is a local
+    # broadcast of replicated KV, not a collective).
+    mesh = get_mesh()
+    nm = mesh.shape.get("model", 1) if mesh is not None else 1
+    shardable = cfg.n_heads % nm == 0 or hkv % nm == 0
+    seq_par = nm > 1 and (cfg.attn_parallel in ("seq", "dp") or
+                          (cfg.attn_parallel == "auto" and not shardable))
+    repeat_kv = (not seq_par and nm > 1 and hkv % nm != 0
+                 and cfg.n_heads % nm == 0 and g > 1)
+
+    q = _split_heads(x @ p["wq"], cfg.n_heads, dh)
+    k = _split_heads(src @ p["wk"], hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    kv_pos = jnp.arange(skv) if kv_x is not None else pos
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, kv_pos, cfg.rope_theta, cfg.rotary_pct)
+    k_cache = k
+    if repeat_kv:
+        k = jnp.repeat(k, g, axis=2)
+        hkv_eff, g_eff = cfg.n_heads, 1
+    else:
+        hkv_eff, g_eff = hkv, g
+    if seq_par:
+        # sequence-parallel attention: queries stay seq-sharded, KV is
+        # gathered (replicated) — scores/softmax/AV are shard-local.
+        # Indivisible seq (whisper's 1500 frames): batch over all axes.
+        qg = q.reshape(b, sq, hkv_eff, g_eff, dh)
+        if sq % nm == 0 and cfg.attn_parallel != "dp":
+            k = constrain(k, DP, None, None, None)
+            qg = constrain(qg, DP, "model", None, None, None)
+        else:
+            from repro.dist.context import DPM
+            k = constrain(k, DPM, None, None, None)
+            qg = constrain(qg, DPM, None, None, None, None)
+    else:
+        k = constrain_heads(k, head_dims=(2,))
+        qg = q.reshape(b, sq, hkv_eff, g_eff, dh)
+        qg = constrain_heads(qg, head_dims=(2, 3))
+
+    chunk = pick_chunk(skv, cfg.attn_chunk)
+    mca_v = cfg.mca.active("v_proj") and mca_key is not None
+    banded = _use_banded(cfg, window, skv, causal, kv_x)
+
+    if mca_v:
+        if banded:
+            m, lse, colmax = banded_lse_colmax(
+                qg, k, scale=scale, window=window, chunk_q=chunk,
+                unroll=cfg.unroll_inner)
+        elif cfg.mca.fast_colmax:
+            m, lse, colmax = chunked_lse_colmax_fused(
+                qg, k, scale=scale, causal=causal, window=window,
+                chunk=chunk, unroll=cfg.unroll_inner)
+        else:
+            m, lse = chunked_lse(qg, k, scale=scale, causal=causal,
+                                 window=window, chunk=chunk,
+                                 unroll=cfg.unroll_inner)
+            colmax = chunked_colmax(qg, k, lse, scale=scale, causal=causal,
+                                    window=window, chunk=chunk,
+                                    unroll=cfg.unroll_inner)
+        kv, s_v = mca_project(jax.random.fold_in(mca_key, 1), src, p["wv"],
+                              colmax, skv, cfg.mca, "v_proj")
+        stats = _acc_stats(stats, s_v)
+        v_cache = _split_heads(kv, hkv, dh)
+        v = jnp.repeat(v_cache, g, axis=2) if repeat_kv else v_cache
+        if banded:
+            out = banded_av(qg, k, v, lse, scale=scale, window=window,
+                            chunk_q=chunk, unroll=cfg.unroll_inner)
+        else:
+            out = chunked_av(qg, k, v, lse, scale=scale, causal=causal,
+                             window=window, chunk=chunk,
+                             unroll=cfg.unroll_inner)
+        rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))     # [B, Sq]
+    else:
+        v_cache = _split_heads(src @ p["wv"], hkv, dh)
+        v = jnp.repeat(v_cache, g, axis=2) if repeat_kv else v_cache
+        if banded:
+            out, m, lse = banded_onepass(qg, k, v, scale=scale,
+                                         window=window, chunk_q=chunk,
+                                         unroll=cfg.unroll_inner)
+        else:
+            out, m, lse = onepass_attention(
+                qg, k, v, scale=scale, causal=causal, window=window,
+                chunk=chunk, unroll=cfg.unroll_inner)
+        rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))
+
+    out = out.reshape(b, sq, cfg.n_heads * dh)
+    if cfg.mca.active("o_proj") and mca_key is not None:
+        y, s_o = mca_project(jax.random.fold_in(mca_key, 2), out, p["wo"],
+                             rowmax, sq, cfg.mca, "o_proj")
+        stats = _acc_stats(stats, s_o)
+    else:
+        y = out @ p["wo"]
+
+    # cache holds the (possibly MCA-encoded) V at the ORIGINAL kv-head
+    # count — decode reuses H-tilde, matching Y = A @ H-tilde semantics.
+    kv_out = (k_cache, v_cache) if return_kv else None
+    return y, kv_out, stats, rowmax
+
+
+# ------------------------------------------------------------ GQA decode
+def init_gqa_cache(cfg, batch, max_len, dtype):
+    w = cfg.window if cfg.window > 0 else 0
+    slots = w if w else max_len
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.d_head), dtype),
+        "slot_pos": jnp.full((slots,), -1, jnp.int32),
+    }
+
+
+def _decode_attn_chunked(qg, kc, vc, valid, scale, chunk):
+    """Flash-decode: online softmax over cache-slot chunks.
+
+    Avoids materializing the [B,Hkv,G,1,slots] f32 score buffer that
+    dominates decode temp memory at 32k+ contexts (measured 19.4 GB on
+    qwen3 decode_32k with the monolithic softmax).
+
+    qg: [B,1,hkv,g,dh]; kc/vc: [B,slots,hkv,dh]; valid: [slots] bool.
+    Returns (out [B,1,hkv,g,dh], a_max [B,1] rowmax probability)."""
+    b = qg.shape[0]
+    hkv, g, dh = qg.shape[2], qg.shape[3], qg.shape[4]
+    slots = kc.shape[1]
+
+    def step(carry, ci):
+        m, l, acc = carry
+        # dynamic slices of the (donated) cache — no moveaxis copy
+        kcb = jax.lax.dynamic_slice_in_dim(kc, ci * chunk, chunk, axis=1)
+        vcb = jax.lax.dynamic_slice_in_dim(vc, ci * chunk, chunk, axis=1)
+        vm = jax.lax.dynamic_slice_in_dim(valid, ci * chunk, chunk)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kcb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(vm[None, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p_, axis=-1)
+        corr_b = jnp.moveaxis(corr, -1, 1)[..., None]
+        acc = acc * corr_b + jnp.einsum(
+            "bhgqc,bchd->bqhgd", p_.astype(vcb.dtype), vcb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, 1), jnp.float32)
+    acc0 = jnp.zeros((b, 1, hkv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  jnp.arange(slots // chunk))
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / jnp.moveaxis(safe_l, -1, 1)[..., None]).astype(vc.dtype)
+    # max attention prob per query = exp(m - lse)
+    a_max = jnp.max(jnp.exp(m - (m + jnp.log(safe_l))), axis=(1, 2, 3)
+                    )[:, None]
+    return out, a_max
+
+
+def gqa_decode(p, cfg, x, cache, *, t):
+    """Single-token decode. x: [B, 1, d]; t: scalar int32 position.
+
+    Returns (y, new_cache, rowmax [B,1])."""
+    b = x.shape[0]
+    hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    dh = cfg.d_head
+    scale = dh ** -0.5
+    slots = cache["k"].shape[1]
+
+    q = _split_heads(x @ p["wq"], cfg.n_heads, dh)
+    k1 = _split_heads(x @ p["wk"], hkv, dh)
+    v1 = _split_heads(x @ p["wv"], hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k1 = rmsnorm(k1, p["k_norm"], cfg.norm_eps)
+    posb = jnp.full((b, 1), t)
+    q = apply_rope(q, posb, cfg.rope_theta, cfg.rotary_pct)
+    k1 = apply_rope(k1, posb, cfg.rope_theta, cfg.rotary_pct)
+
+    slot = t % slots if cfg.window > 0 else t
+    kc = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+    spos = cache["slot_pos"].at[slot].set(t)
+
+    qg = q.reshape(b, 1, hkv, g, dh)
+    valid = spos >= 0
+    if slots >= 8192 and slots % 1024 == 0:
+        # flash-decode path: never materialize the full score buffer
+        out, rowmax = _decode_attn_chunked(qg, kc, vc, valid, scale, 1024)
+    else:
+        s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqs,bshd->bqhgd", a.astype(vc.dtype), vc)
+        rowmax = jnp.max(a, axis=(1, 2, 4))                 # [B, 1]
+    out = out.reshape(b, 1, cfg.n_heads * dh)
+    y = out @ p["wo"]
+    return y, {"k": kc, "v": vc, "slot_pos": spos}, rowmax
+
+
+# ------------------------------------------------------------ MLA module
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 7)
+    dt = cfg.jnp_dtype
+    h = cfg.n_heads
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, cfg.mla_q_lora, dt),
+        "w_uq": dense_init(ks[1], cfg.mla_q_lora,
+                           h * (cfg.mla_qk_nope + cfg.mla_qk_rope), dt),
+        "w_dkv": dense_init(ks[2], cfg.d_model, cfg.mla_kv_lora, dt),
+        "w_kr": dense_init(ks[3], cfg.d_model, cfg.mla_qk_rope, dt),
+        "w_uk": dense_init(ks[4], cfg.mla_kv_lora, h * cfg.mla_qk_nope, dt),
+        "w_uv": dense_init(ks[5], cfg.mla_kv_lora, h * cfg.mla_v_dim, dt),
+        "wo": dense_init(ks[6], h * cfg.mla_v_dim, cfg.d_model, dt),
+        "q_ln": jnp.zeros((cfg.mla_q_lora,), jnp.float32),
+        "kv_ln": jnp.zeros((cfg.mla_kv_lora,), jnp.float32),
+    }
+
+
+def mla_attention(p, cfg, x, *, pos, mca_key=None, return_cache=False):
+    """MLA (latent) attention, full-sequence. MCA applies to the latent
+    value up-projection W_UV (importance = colmax) and W_O."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
+    scale = (dn + dr) ** -0.5
+    stats = _zero_stats()
+
+    cq = rmsnorm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
+    q = _split_heads(cq @ p["w_uq"], h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    ckv = rmsnorm(x @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], pos,
+                        cfg.rope_theta)                     # [B,S,1,dr]
+    k_nope = _split_heads(ckv @ p["w_uk"], h, dn)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qg = q_full.reshape(b, s, h, 1, dn + dr)                # hkv=h, g=1
+    mesh = get_mesh()
+    nm = mesh.shape.get("model", 1) if mesh is not None else 1
+    if nm > 1 and cfg.attn_parallel in ("seq", "auto"):
+        # MLA weights are replicated; run attention sequence-parallel
+        k = constrain(k, DP, None, None, None)
+        qg = constrain(qg, DP, "model", None, None, None)
+
+    chunk = pick_chunk(s, cfg.attn_chunk)
+    mca_v = cfg.mca.active("v_proj") and mca_key is not None
+    if mca_v:
+        m, lse = chunked_lse(qg, k, scale=scale, causal=cfg.causal,
+                             window=0, chunk=chunk,
+                             unroll=cfg.unroll_inner)
+        colmax = chunked_colmax(qg, k, lse, scale=scale, causal=cfg.causal,
+                                window=0, chunk=chunk,
+                                unroll=cfg.unroll_inner)
+        hv, s_v = mca_project(jax.random.fold_in(mca_key, 1), ckv, p["w_uv"],
+                              colmax, s, cfg.mca, "v_proj")
+        stats = _acc_stats(stats, s_v)
+        v = _split_heads(hv, h, dv)
+        out = chunked_av(qg, k, v, lse, scale=scale, causal=cfg.causal,
+                         window=0, chunk=chunk, unroll=cfg.unroll_inner)
+        rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))
+    else:
+        v = _split_heads(ckv @ p["w_uv"], h, dv)
+        out, m, lse = onepass_attention(qg, k, v, scale=scale,
+                                        causal=cfg.causal, window=0,
+                                        chunk=chunk,
+                                        unroll=cfg.unroll_inner)
+        rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))
+
+    out = out.reshape(b, s, h * dv)
+    if cfg.mca.active("o_proj") and mca_key is not None:
+        y, s_o = mca_project(jax.random.fold_in(mca_key, 2), out, p["wo"],
+                             rowmax, s, cfg.mca, "o_proj")
+        stats = _acc_stats(stats, s_o)
+    else:
+        y = out @ p["wo"]
+
+    cache = (ckv, k_rope[:, :, 0, :]) if return_cache else None
+    return y, cache, stats, rowmax
+
+
+def init_mla_cache(cfg, batch, max_len, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.mla_kv_lora), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.mla_qk_rope), dtype),
+    }
+
+
+def mla_decode(p, cfg, x, cache, *, t):
+    """Absorbed-matrix MLA decode: scores/value read the latent cache
+    directly; per-token cache cost is (kv_lora + rope) floats."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
+    dl = cfg.mla_kv_lora
+    scale = (dn + dr) ** -0.5
+
+    cq = rmsnorm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
+    q = _split_heads(cq @ p["w_uq"], h, dn + dr)            # [B,1,h,dn+dr]
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posb = jnp.full((b, 1), t)
+    q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
+
+    ckv1 = rmsnorm(x @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)  # [B,1,dl]
+    kr1 = apply_rope((x @ p["w_kr"])[:, :, None, :], posb,
+                     cfg.rope_theta)[:, :, 0, :]              # [B,1,dr]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv1, (0, t, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr1, (0, t, 0))
+
+    # absorb W_UK into the query:  q_lat[b,h,dl] = q_nope . W_UK[:, h, :]
+    w_uk = p["w_uk"].reshape(dl, h, dn)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)
+    s_lat = jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv,
+                       preferred_element_type=jnp.float32)
+    s_rot = jnp.einsum("bqhd,bsd->bhqs", q_rope, kr,
+                       preferred_element_type=jnp.float32)
+    s = (s_lat + s_rot) * scale
+    valid = jnp.arange(ckv.shape[1]) <= t
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsl->bqhl", a.astype(ckv.dtype), ckv)
+    # absorb W_UV on the way out
+    w_uv = p["w_uv"].reshape(dl, h, dv)
+    out = jnp.einsum("bqhl,lhv->bqhv", out_lat, w_uv).reshape(b, 1, h * dv)
+    y = out @ p["wo"]
+    rowmax = jnp.max(a, axis=(1, 3))
+    return y, {"ckv": ckv, "kr": kr}, rowmax

@@ -1,0 +1,128 @@
+"""Shared layers: norms, RoPE, embeddings, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ init
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(dt)
+
+
+def init_norm(cfg, dtype=jnp.float32):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_norm(params, cfg, x):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rmsnorm(x, params["scale"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_angles(pos: jax.Array, dh_rot: int, theta: float) -> jax.Array:
+    """pos: [...]; returns [..., dh_rot//2] angles."""
+    half = dh_rot // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return pos.astype(jnp.float32)[..., None] * freq
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: [B, S, H, dh]; pos: [B, S] (or [S]). Split-half (NeoX) convention;
+    only the first ``rotary_pct * dh`` dims are rotated (partial rotary)."""
+    dh = x.shape[-1]
+    dh_rot = int(dh * rotary_pct)
+    dh_rot -= dh_rot % 2
+    if dh_rot == 0:
+        return x
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = rope_angles(pos, dh_rot, theta)          # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr, xp = x[..., :dh_rot], x[..., dh_rot:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin,
+                               x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, xp], axis=-1)
+
+
+# ------------------------------------------------------------- embedding
+def init_embedding(key, cfg):
+    return {"table": embed_init(key, cfg.padded_vocab, cfg.d_model,
+                                cfg.jnp_dtype)}
+
+
+def embed_tokens(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def logits_from_hidden(table: jax.Array, x: jax.Array) -> jax.Array:
+    """x: [..., d] @ table.T -> [..., padded_vocab]."""
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def maybe_scan(body, carry, xs, unroll: bool = False):
+    """lax.scan, or an unrolled python loop when ``unroll``.
+
+    Unrolling exists for the dry-run cost-analysis pass: XLA's
+    cost_analysis counts a while-loop body ONCE regardless of trip count,
+    so roofline lowering unrolls every scan to get true FLOPs/bytes.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def sinusoidal_pos_emb(s: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """[S, d] fixed sinusoidal embedding (whisper-style frontends)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = jnp.arange(s)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

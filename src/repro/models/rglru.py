@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-sigmoid gates.
+
+Full-sequence path uses jax.lax.associative_scan (log-depth on TPU);
+decode is the single-step recurrence.  MCA is inapplicable on recurrent
+layers (no attention matrix); the hybrid stack applies MCA only on its
+local-attention layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import DP, constrain
+from .common import dense_init, gelu
+
+RG_LRU_C = 8.0
+
+
+def init_recurrent_block(key, cfg):
+    ks = jax.random.split(key, 7)
+    dt = cfg.jnp_dtype
+    d, dr = cfg.d_model, cfg.rnn_width
+    # Lambda init so that a ~ U(0.9, 0.999)^c-ish (Griffin appendix)
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, dr)) / RG_LRU_C))
+    return {
+        "w_gelu": dense_init(ks[0], d, dr, dt),
+        "w_rec": dense_init(ks[1], d, dr, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, dr),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": dense_init(ks[3], dr, dr, dt),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": dense_init(ks[4], dr, dr, dt),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[5], dr, d, dt),
+    }
+
+
+def _gates(p, x):
+    """x: [..., dr] -> (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"])
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) \
+        * (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def rg_lru(p, x):
+    """x: [B, S, dr] -> [B, S, dr]; associative linear recurrence.
+    Channels shard over "model" (the recurrence is elementwise)."""
+    x = constrain(x, DP, None, "model")
+    a, b = _gates(p, x)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rg_lru_step(p, x, h_prev):
+    """x: [B, dr]; h_prev: [B, dr] f32 -> (y, h)."""
+    a, b = _gates(p, x)
+    h = a * h_prev + b
+    return h.astype(x.dtype), h
+
+
+def recurrent_block(p, cfg, x):
+    """Griffin recurrent block, full sequence. x: [B, S, d_model]."""
+    from .ssm import causal_conv1d
+    gate = gelu(x @ p["w_gelu"])
+    rec_in = x @ p["w_rec"]
+    rec = causal_conv1d(rec_in, p["conv_w"], p["conv_b"])
+    rec = rg_lru(p, rec)
+    y = (gate * rec) @ p["w_out"]
+    return y
+
+
+def recurrent_block_with_state(p, cfg, x):
+    """Like recurrent_block but also returns (conv_tail, h_final) for
+    prefill -> decode handoff."""
+    from .ssm import causal_conv1d
+    gate = gelu(x @ p["w_gelu"])
+    rec_in = x @ p["w_rec"]
+    rec_conv = causal_conv1d(rec_in, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, rec_conv)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate * h.astype(x.dtype)) @ p["w_out"]
+    conv_tail = rec_in[:, -(cfg.conv_width - 1):]
+    return y, conv_tail, h[:, -1]
+
+
+def init_recurrent_cache(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), dtype),
+    }
+
+
+def recurrent_decode(p, cfg, x, cache):
+    """Single-token decode. x: [B, 1, d_model]."""
+    gate = gelu(x[:, 0] @ p["w_gelu"])
+    rec_in = x[:, 0] @ p["w_rec"]
+    conv_buf = jnp.concatenate([cache["conv"], rec_in[:, None]], axis=1)
+    rec = jnp.sum(conv_buf * p["conv_w"][None], axis=1) + p["conv_b"][None]
+    y_rec, h = rg_lru_step(p, rec, cache["h"])
+    y = ((gate * y_rec) @ p["w_out"])[:, None]
+    return y, {"h": h, "conv": conv_buf[:, 1:]}

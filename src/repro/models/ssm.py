@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD, state-space duality) layer — chunked scan, pure JAX.
+
+Implements the SSD algorithm of arXiv:2405.21060: intra-chunk quadratic
+(semiseparable) term + inter-chunk state recurrence via lax.scan.  MCA is
+inapplicable here (no attention matrix — see DESIGN.md §Arch-applicability);
+the layer runs exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import constrain_heads
+from .common import dense_init, maybe_scan, rmsnorm
+
+
+def init_mamba2(key, cfg):
+    ks = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    d_in = cfg.ssm_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = d_in + 2 * g * n
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * d_in + 2 * g * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[3], d_in, cfg.d_model, dt),
+    }
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: [B,S,C]; w: [W,C]; left-pad W-1."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    return out + b[None, None]
+
+
+def ssd_chunked(xs, dt, a, bmat, cmat, chunk, unroll=False):
+    """SSD forward. xs: [B,S,H,P]; dt: [B,S,H]; a: [H] (negative);
+    bmat/cmat: [B,S,G,N]; H % G == 0. Returns (y [B,S,H,P], state
+    [B,G,HG,N,P] final)."""
+    b, s, h, p = xs.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    q = chunk
+    nc = s // q
+
+    da = (dt * a[None, None]).reshape(b, nc, q, g, hg)       # log-decay
+    xc = xs.reshape(b, nc, q, g, hg, p)
+    dtc = dt.reshape(b, nc, q, g, hg)
+    bc = bmat.reshape(b, nc, q, g, n)
+    cc = cmat.reshape(b, nc, q, g, n)
+    cum = jnp.cumsum(da, axis=2)                             # [b,nc,q,g,hg]
+
+    def step(state, inp):
+        cum_c, x_c, dt_c, b_c, c_c = inp                     # chunk tensors
+        # intra-chunk (quadratic, causal-masked decay kernel)
+        scores = jnp.einsum("bign,bjgn->bijg", c_c, b_c)     # [b,q,q,g]
+        ldec = jnp.exp(cum_c[:, :, None] - cum_c[:, None])   # [b,i,j,g,hg]
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        ldec = jnp.where(mask[None, :, :, None, None], ldec, 0.0)
+        xdt = x_c * dt_c[..., None]                          # [b,q,g,hg,p]
+        y_intra = jnp.einsum("bijg,bijgh,bjghp->bighp",
+                             scores, ldec, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bign,bghnp->bighp", c_c, state) \
+            * jnp.exp(cum_c)[..., None]
+        # new state carried out of the chunk
+        decay_out = jnp.exp(cum_c[:, -1:, :, :] - cum_c)     # [b,q,g,hg]
+        state_c = jnp.einsum("bjgn,bjghp->bghnp",
+                             b_c, xdt * decay_out[..., None])
+        total = jnp.exp(cum_c[:, -1])                        # [b,g,hg]
+        state = state * total[..., None, None] + state_c
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    cum_m = jnp.moveaxis(cum, 1, 0)
+    x_m = jnp.moveaxis(xc.astype(jnp.float32), 1, 0)
+    dt_m = jnp.moveaxis(dtc, 1, 0)
+    b_m = jnp.moveaxis(bc.astype(jnp.float32), 1, 0)
+    c_m = jnp.moveaxis(cc.astype(jnp.float32), 1, 0)
+    state, ys = maybe_scan(step, state0, (cum_m, x_m, dt_m, b_m, c_m),
+                           unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y.astype(xs.dtype), state
+
+
+def ssd_sequential(xs, dt, a, bmat, cmat):
+    """O(S) sequential oracle for tests."""
+    b, s, h, p = xs.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp                            # [b,g,hg,p] ...
+        decay = jnp.exp(dt_t * a.reshape(g, hg)[None])       # [b,g,hg]
+        upd = jnp.einsum("bgn,bghp->bghnp", b_t,
+                         x_t * dt_t[..., None])
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bgn,bghnp->bghp", c_t, state)
+        return state, y_t
+
+    xs_m = jnp.moveaxis(xs.reshape(b, s, g, hg, p).astype(jnp.float32), 1, 0)
+    dt_m = jnp.moveaxis(dt.reshape(b, s, g, hg), 1, 0)
+    b_m = jnp.moveaxis(bmat.astype(jnp.float32), 1, 0)
+    c_m = jnp.moveaxis(cmat.astype(jnp.float32), 1, 0)
+    state0 = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, (xs_m, dt_m, b_m, c_m))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p).astype(xs.dtype), state
+
+
+def mamba2_forward(p, cfg, x, *, state=None, conv_state=None,
+                   return_state=False):
+    """Full-sequence Mamba-2 block. x: [B, S, d_model]."""
+    b, s, _ = x.shape
+    d_in = cfg.ssm_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    ph = cfg.ssm_headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc_raw = zxbcdt[..., d_in:d_in + d_in + 2 * g * n]
+    dt_raw = zxbcdt[..., -h:]
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_in].reshape(b, s, h, ph)
+    xs = constrain_heads(xs, head_dims=(2,))     # 80 SSD heads over model
+    bmat = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk != 0:
+        chunk //= 2
+    y, final_state = ssd_chunked(xs, dt, a, bmat, cmat, chunk,
+                                 unroll=cfg.unroll_inner)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        # decode conv cache = last (conv_width - 1) pre-activation xBC rows
+        conv_tail = xbc_raw[:, -(cfg.conv_width - 1):]
+        return out, final_state, conv_tail
+    return out
+
+
+def init_mamba2_cache(cfg, batch, dtype):
+    d_in = cfg.ssm_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h, ph = cfg.ssm_heads, cfg.ssm_headdim
+    hg = h // g
+    return {
+        "state": jnp.zeros((batch, g, hg, n, ph), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           d_in + 2 * g * n), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """Single-token decode. x: [B, 1, d_model]."""
+    b = x.shape[0]
+    d_in = cfg.ssm_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h, ph = cfg.ssm_heads, cfg.ssm_headdim
+    hg = h // g
+
+    zxbcdt = (x @ p["in_proj"])[:, 0]                        # [B, ...]
+    z = zxbcdt[..., :d_in]
+    xbc_new = zxbcdt[..., d_in:d_in + d_in + 2 * g * n]
+    dt_raw = zxbcdt[..., -h:]
+
+    conv_buf = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    w = p["conv_w"]
+    xbc = jnp.sum(conv_buf * w[None], axis=1) + p["conv_b"][None]
+    xbc = jax.nn.silu(xbc)
+    new_conv = conv_buf[:, 1:]
+
+    xs = xbc[..., :d_in].reshape(b, g, hg, ph).astype(jnp.float32)
+    bmat = xbc[..., d_in:d_in + g * n].reshape(b, g, n).astype(jnp.float32)
+    cmat = xbc[..., d_in + g * n:].reshape(b, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"]).reshape(b, g, hg)
+    a = -jnp.exp(p["a_log"]).reshape(g, hg)
+
+    decay = jnp.exp(dt * a[None])
+    upd = jnp.einsum("bgn,bghp->bghnp", bmat, xs * dt[..., None])
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bgn,bghnp->bghp", cmat, state)
+    y = y + p["d_skip"].reshape(g, hg)[None, ..., None] * xs
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z[:, None])
+    out = y @ p["out_proj"]
+    return out, {"state": state, "conv": new_conv}

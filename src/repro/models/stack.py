@@ -1,0 +1,197 @@
+"""Layer stacks: init / forward / prefill / decode for every family.
+
+Homogeneous stacks run under jax.lax.scan over stacked per-layer params
+(small HLO, fast AOT compile at 512 devices); the hybrid (RecurrentGemma)
+stack scans over repeating block-pattern groups with an unrolled remainder.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import DP, constrain, constrain_residual
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import rglru, ssm
+from .common import apply_norm, init_norm, maybe_scan
+
+
+def _zero_carry_stats():
+    return {"exact_flops": jnp.zeros((), jnp.float32),
+            "mca_flops": jnp.zeros((), jnp.float32)}
+
+
+def _add_stats(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+# ============================================================ layer kinds
+def layer_kind(cfg) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "moe":
+        return "attn_moe"
+    return "attn_ffn"
+
+
+def init_layer(key, cfg, kind: str):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg)}
+    if kind == "ssm":
+        p["mixer"] = ssm.init_mamba2(ks[0], cfg)
+        return p
+    if kind == "rec_ffn":
+        p["mixer"] = rglru.init_recurrent_block(ks[0], cfg)
+    elif cfg.attn_type == "mla":
+        p["mixer"] = attn.init_mla(ks[0], cfg)
+    else:
+        p["mixer"] = attn.init_gqa(ks[0], cfg)
+    p["ln2"] = init_norm(cfg)
+    if kind == "attn_moe":
+        p["ffn"] = ffn_mod.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = ffn_mod.init_ffn(ks[1], cfg)
+    if kind == "dec_attn_ffn":                       # cross-attention branch
+        p["ln_x"] = init_norm(cfg)
+        p["cross"] = attn.init_gqa(ks[2], cfg)
+    return p
+
+
+def layer_forward(p, cfg, x, *, pos, mca_key, kind: str,
+                  enc_out=None, causal=None, window=None):
+    """One residual block. Returns (x, aux_loss, stats)."""
+    aux = jnp.zeros((), jnp.float32)
+    stats = _zero_carry_stats()
+
+    # Megatron-SP: residual stream sharded batch-over-DP and seq-over-model
+    # at layer boundaries; GSPMD inserts the all-gather/reduce-scatter pair
+    # around attention/FFN. Cuts saved-activation memory n_model-fold.
+    x = constrain_residual(x, cfg.attn_parallel)
+    h = apply_norm(p["ln1"], cfg, x)
+    if kind == "ssm":
+        x = x + ssm.mamba2_forward(p["mixer"], cfg, h)
+        return x, aux, stats
+    if kind == "rec_ffn":
+        x = x + rglru.recurrent_block(p["mixer"], cfg, h)
+    elif cfg.attn_type == "mla":
+        y, _, st, _ = attn.mla_attention(p["mixer"], cfg, h, pos=pos,
+                                         mca_key=mca_key)
+        stats = _add_stats(stats, st)
+        x = x + y
+    else:
+        y, _, st, _ = attn.gqa_attention(p["mixer"], cfg, h, pos=pos,
+                                         mca_key=mca_key, causal=causal,
+                                         window=window)
+        stats = _add_stats(stats, st)
+        x = x + y
+
+    if kind == "dec_attn_ffn" and enc_out is not None:
+        h = apply_norm(p["ln_x"], cfg, x)
+        y, _, st, _ = attn.gqa_attention(
+            p["cross"], cfg, h, pos=pos,
+            mca_key=None if mca_key is None else jax.random.fold_in(
+                mca_key, 7),
+            causal=False, window=0, kv_x=enc_out)
+        stats = _add_stats(stats, st)
+        x = x + y
+
+    h = apply_norm(p["ln2"], cfg, x)
+    if kind == "attn_moe":
+        y, aux_l, st = ffn_mod.moe_ffn(p["ffn"], cfg, h, mca_key=mca_key)
+        aux = aux + aux_l
+        stats = _add_stats(stats, st)
+    else:
+        y = ffn_mod.ffn(p["ffn"], cfg, h)
+    return x + y, aux, stats
+
+
+# ====================================================== homogeneous stack
+def init_stack(key, cfg, n_layers: int, kind: str):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: init_layer(k, cfg, kind))(keys)
+
+
+def stack_forward(params, cfg, x, *, pos, mca_key, kind: str, enc_out=None,
+                  causal=None, window=None):
+    """Scan (or unroll) over layers. Returns (x, aux, stats)."""
+    n_layers = jax.tree_util.tree_leaves(params)[0].shape[0]
+
+    def body(carry, inp):
+        xx, aux, stats = carry
+        p_l, idx = inp
+        key_l = None if mca_key is None else jax.random.fold_in(mca_key, idx)
+        xx, aux_l, st = layer_forward(p_l, cfg, xx, pos=pos, mca_key=key_l,
+                                      kind=kind, enc_out=enc_out,
+                                      causal=causal, window=window)
+        return (xx, aux + aux_l, _add_stats(stats, st)), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    carry0 = (x, jnp.zeros((), jnp.float32), _zero_carry_stats())
+    if cfg.unroll_layers:
+        carry = carry0
+        for i in range(n_layers):
+            p_l = jax.tree.map(lambda a: a[i], params)
+            carry, _ = body_fn(carry, (p_l, jnp.asarray(i)))
+        return carry
+    (x, aux, stats), _ = jax.lax.scan(
+        body_fn, carry0, (params, jnp.arange(n_layers)))
+    return x, aux, stats
+
+
+# ============================================================ hybrid stack
+def hybrid_layout(cfg):
+    """Returns (n_groups, pattern_kinds, remainder_kinds)."""
+    pat = tuple("rec_ffn" if k == "rec" else "attn_ffn"
+                for k in cfg.block_pattern)
+    n_groups = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_groups * len(pat)
+    return n_groups, pat, pat[:rem]
+
+
+def init_hybrid(key, cfg):
+    n_groups, pat, rem = hybrid_layout(cfg)
+    ks = jax.random.split(key, len(pat) + len(rem))
+    grouped = {}
+    for i, kind in enumerate(pat):
+        keys = jax.random.split(ks[i], n_groups)
+        grouped[f"pos{i}"] = jax.vmap(
+            lambda k: init_layer(k, cfg, kind))(keys)
+    remainder = [init_layer(ks[len(pat) + i], cfg, kind)
+                 for i, kind in enumerate(rem)]
+    return {"groups": grouped, "rem": remainder}
+
+
+def hybrid_forward(params, cfg, x, *, pos, mca_key):
+    n_groups, pat, rem = hybrid_layout(cfg)
+
+    def body(carry, inp):
+        xx, aux, stats = carry
+        group_params, gidx = inp
+        for i, kind in enumerate(pat):
+            key_l = None if mca_key is None else jax.random.fold_in(
+                mca_key, gidx * len(pat) + i)
+            win = cfg.window if kind == "attn_ffn" else 0
+            xx, aux_l, st = layer_forward(
+                group_params[f"pos{i}"], cfg, xx, pos=pos,
+                mca_key=key_l, kind=kind, window=win)
+            aux = aux + aux_l
+            stats = _add_stats(stats, st)
+        return (xx, aux, stats), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    carry0 = (x, jnp.zeros((), jnp.float32), _zero_carry_stats())
+    (x, aux, stats), _ = maybe_scan(
+        body_fn, carry0, (params["groups"], jnp.arange(n_groups)),
+        cfg.unroll_layers)
+    for i, kind in enumerate(rem):
+        key_l = None if mca_key is None else jax.random.fold_in(
+            mca_key, n_groups * len(pat) + i)
+        win = cfg.window if kind == "attn_ffn" else 0
+        x, aux_l, st = layer_forward(params["rem"][i], cfg, x, pos=pos,
+                                     mca_key=key_l, kind=kind, window=win)
+        aux = aux + aux_l
+        stats = _add_stats(stats, st)
+    return x, aux, stats

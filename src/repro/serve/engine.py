@@ -1,0 +1,97 @@
+"""Serving: prefill + decode engine with a simple continuous batcher.
+
+The engine wraps Model.prefill/Model.decode into jitted, cache-donating
+steps; ``ContinuousBatcher`` multiplexes requests onto fixed decode slots
+(vLLM-style slot reuse at toy scale — enough to drive the serving example
+and tests end-to-end)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model, _logits
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch_size: int, max_len: int,
+                 mca_enabled: bool = False, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed) if mca_enabled else None
+
+        cfg = model.cfg
+
+        def prefill(params, batch_in):
+            cache, hidden = model.prefill(params, batch_in, max_len,
+                                          self.key)
+            return cache, _logits(params, cfg, hidden[:, -1:])
+
+        def decode(params, tok, cache, t):
+            return model.decode(params, tok, cache, t)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 greedy: bool = True) -> np.ndarray:
+        """prompts: [B, S]. Returns [B, max_new] generated ids."""
+        b, s = prompts.shape
+        assert b == self.batch
+        batch_in = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        cache, logits = self._prefill(self.params, batch_in)
+        outs = []
+        tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size], axis=-1)
+        outs.append(tok)
+        for i in range(max_new - 1):
+            t = jnp.asarray(s + i, jnp.int32)
+            logits, cache = self._decode(self.params, tok.astype(jnp.int32),
+                                         cache, t)
+            tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size], axis=-1)
+            outs.append(tok)
+        return np.concatenate([np.asarray(t) for t in outs], axis=1)
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching: finished slots immediately take the
+    next queued request (prefill is re-run for the whole slot batch at toy
+    scale; production would use per-slot prefill insertion)."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self.done: Dict[int, List[int]] = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self) -> Dict[int, List[int]]:
+        b = self.engine.batch
+        while self.queue:
+            wave, self.queue = self.queue[:b], self.queue[b:]
+            while len(wave) < b:                       # pad with a dummy
+                wave.append(Request(uid=-1, prompt=wave[0].prompt,
+                                    max_new=wave[0].max_new))
+            s = max(len(r.prompt) for r in wave)
+            prompts = np.stack([
+                np.pad(r.prompt, (s - len(r.prompt), 0), mode="edge")
+                for r in wave])
+            max_new = max(r.max_new for r in wave)
+            gen = self.engine.generate(prompts, max_new)
+            for i, r in enumerate(wave):
+                if r.uid >= 0:
+                    self.done[r.uid] = gen[i, :r.max_new].tolist()
+        return self.done

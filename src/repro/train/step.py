@@ -1,0 +1,98 @@
+"""Jitted, sharded train / eval steps."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models.api import Model
+from repro.optim import adamw
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    n_micro: int = 1, seed: int = 0, with_mca: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(p, b, k):
+        return model.loss(p, b, k if with_mca else None)
+
+    def train_step(params, opt_state, batch):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                 opt_state["count"])
+        (loss, metrics), grads = adamw.accumulate_gradients(
+            loss_fn, params, batch, n_micro, key)
+        params, opt_state, gnorm = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["total_loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def abstract_state(model: Model, key=None):
+    """eval_shape'd (params, opt_state) — no allocation."""
+    a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    a_opt = jax.eval_shape(adamw.init_state, a_params)
+    return a_params, a_opt
+
+
+def train_step_shardings(mesh, model: Model, abstract_batch,
+                         fsdp: bool = True):
+    """(in_shardings, out_shardings) for jit(train_step).
+
+    fsdp=True (default for training) additionally shards params/grads over
+    the data axis (FSDP/ZeRO-3 style); XLA all-gathers each layer's weights
+    on demand inside the scan. Inference shardings keep TP-only weights
+    (per-token all-gathers would dominate decode latency).
+    """
+    a_params, a_opt = abstract_state(model)
+    p_sh = shd.param_shardings(mesh, a_params, model.cfg)
+    z_sh = shd.zero1_shardings(mesh, p_sh, a_params)
+    if fsdp:
+        p_sh = z_sh
+    opt_sh = {"m": z_sh, "v": z_sh, "count": NamedSharding(mesh, P())}
+    b_sh = shd.batch_shardings(mesh, abstract_batch)
+    in_sh = (p_sh, opt_sh, b_sh)
+    out_sh = (p_sh, opt_sh, None)
+    return in_sh, out_sh
+
+
+def jit_train_step(mesh, model: Model, opt_cfg, abstract_batch,
+                   n_micro: int = 1, seed: int = 0, donate: bool = True):
+    step = make_train_step(model, opt_cfg, n_micro, seed)
+    in_sh, out_sh = train_step_shardings(mesh, model, abstract_batch)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1) if donate else ())
+
+
+# ------------------------------------------------------------- serving
+def make_prefill_step(model: Model, max_len: int, with_mca: bool = True,
+                      seed: int = 0):
+    def prefill(params, batch):
+        key = jax.random.PRNGKey(seed) if with_mca else None
+        cache, hidden = model.prefill(params, batch, max_len, key)
+        from repro.models.api import _logits
+        logits = _logits(params, model.cfg, hidden[:, -1:])
+        return cache, logits
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode(params, tokens, cache, t):
+        return model.decode(params, tokens, cache, t)
+    return decode
+
+
+def serve_step_shardings(mesh, model: Model, abstract_cache,
+                         abstract_tokens):
+    a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shd.param_shardings(mesh, a_params, model.cfg)
+    c_sh = shd.cache_shardings(mesh, abstract_cache)
+    t_sh = shd.batch_shardings(mesh, abstract_tokens)
+    return p_sh, c_sh, t_sh

@@ -1,0 +1,124 @@
+"""Trainer: step loop + fault tolerance (checkpoint/restart, step watchdog,
+deterministic data replay) designed for preemptible fleets.
+
+Fault-tolerance model (1000+ nodes posture):
+  * checkpoints are atomic + async; restart restores the latest step and
+    replays the data stream deterministically from there;
+  * a watchdog thread flags steps exceeding ``watchdog_s`` (straggler /
+    hung-collective detection — on a real fleet this triggers the
+    coordinator's restart path; here it logs and counts);
+  * elastic restart: restore() accepts new-mesh shardings, so a job can
+    come back on a different host count (see checkpoint/checkpoint.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.optim import adamw
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    watchdog_s: float = 300.0
+    keep: int = 3
+
+
+class Watchdog:
+    """Flags steps that exceed the deadline (straggler mitigation hook)."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline = deadline_s
+        self.fired = 0
+        self._timer: Optional[threading.Timer] = None
+
+    def arm(self, step: int):
+        self.disarm()
+        self._timer = threading.Timer(self.deadline, self._fire, args=(step,))
+        self._timer.daemon = True
+        self._timer.start()
+
+    def _fire(self, step: int):
+        self.fired += 1
+        log.warning("watchdog: step %d exceeded %.0fs — straggler or hung "
+                    "collective; coordinator should preempt/restart",
+                    step, self.deadline)
+
+    def disarm(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: adamw.AdamWConfig, data,
+                 train_step: Callable, cfg: TrainerConfig,
+                 init_params: Optional[Any] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.data = data
+        self.train_step = train_step
+        self.cfg = cfg
+        self.watchdog = Watchdog(cfg.watchdog_s)
+        self.checkpointer = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep)
+                             if cfg.ckpt_dir else None)
+        self.history: list = []
+
+        self.params = (init_params if init_params is not None
+                       else model.init(jax.random.PRNGKey(0)))
+        self.opt_state = adamw.init_state(self.params)
+        self.start_step = 0
+        if cfg.ckpt_dir:
+            latest = ckpt.latest_step(cfg.ckpt_dir)
+            if latest is not None:
+                state = {"params": self.params, "opt": self.opt_state}
+                state = ckpt.restore(cfg.ckpt_dir, latest, state)
+                self.params = state["params"]
+                self.opt_state = state["opt"]
+                self.start_step = latest
+                log.info("restored checkpoint at step %d", latest)
+
+    def run(self) -> Dict[str, Any]:
+        step = self.start_step
+        t_start = time.time()
+        while step < self.cfg.total_steps:
+            batch = self.data.batch(step)
+            batch = jax.tree.map(jax.numpy.asarray, batch)
+            self.watchdog.arm(step)
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["total_loss"])   # sync point
+            self.watchdog.disarm()
+            dt = time.time() - t0
+            step += 1
+            self.history.append({"step": step, "loss": loss, "dt": dt})
+            if step % self.cfg.log_every == 0 or step == 1:
+                log.info("step %d loss %.4f (%.2fs/step)", step, loss, dt)
+            if self.checkpointer and step % self.cfg.ckpt_every == 0:
+                self.checkpointer.save(
+                    step, {"params": self.params, "opt": self.opt_state})
+        if self.checkpointer:
+            self.checkpointer.save(
+                self.cfg.total_steps,
+                {"params": self.params, "opt": self.opt_state})
+            self.checkpointer.wait()
+        return {"steps": step - self.start_step,
+                "wall_s": time.time() - t_start,
+                "final_loss": self.history[-1]["loss"] if self.history
+                else float("nan"),
+                "watchdog_fired": self.watchdog.fired,
+                "history": self.history}

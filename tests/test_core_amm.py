@@ -1,0 +1,140 @@
+"""Unit + property tests for the Monte-Carlo AMM estimator (core/amm.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import amm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+class TestBlockProbs:
+    def test_sums_to_one(self):
+        w = _rand(jax.random.PRNGKey(0), (256, 64))
+        p = amm.block_probs(w, block=32)
+        assert p.shape == (8,)
+        np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-6)
+
+    def test_proportional_to_block_norms(self):
+        w = np.zeros((128, 16), np.float32)
+        w[:32] = 2.0   # block 0 has 4x the sq norm density of block 1
+        w[32:64] = 1.0
+        p = np.asarray(amm.block_probs(jnp.asarray(w), block=32))
+        assert p[0] > p[1] > p[2]
+        np.testing.assert_allclose(p[0] / p[1], 4.0, rtol=1e-5)
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            amm.block_probs(jnp.ones((100, 4)), block=32)
+
+
+class TestSampledMatmul:
+    def test_full_sampling_unbiased_mean(self):
+        """Monte-Carlo mean over many trials converges to the exact product."""
+        key = jax.random.PRNGKey(1)
+        kx, kw, ks = jax.random.split(key, 3)
+        x = _rand(kx, (16, 128))
+        w = _rand(kw, (128, 32))
+        exact = x @ w
+        probs = amm.block_probs(w, block=16)
+
+        def one(k):
+            idx, inv = amm.draw_block_samples(k, probs, 4)
+            return amm.sampled_matmul(x, w, idx, inv, block=16)
+
+        trials = jax.vmap(one)(jax.random.split(ks, 2048))
+        est = jnp.mean(trials, axis=0)
+        rel = float(jnp.linalg.norm(est - exact) / jnp.linalg.norm(exact))
+        assert rel < 0.05, f"estimator biased: rel err {rel}"
+
+    def test_exact_when_sampling_every_block_uniform(self):
+        """r == K with each block drawn once under uniform p == exact sum."""
+        x = _rand(jax.random.PRNGKey(2), (8, 64))
+        w = _rand(jax.random.PRNGKey(3), (64, 24))
+        k = 4
+        idx = jnp.arange(k, dtype=jnp.int32)
+        probs = jnp.full((k,), 1.0 / k)
+        inv = 1.0 / (k * probs[idx])
+        out = amm.sampled_matmul(x, w, idx, inv, block=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_batched_leading_dims(self):
+        x = _rand(jax.random.PRNGKey(4), (2, 3, 8, 64))
+        w = _rand(jax.random.PRNGKey(5), (64, 16))
+        probs = amm.block_probs(w, block=16)
+        idx, inv = amm.draw_block_samples(jax.random.PRNGKey(6), probs, 4)
+        out = amm.sampled_matmul(x, w, idx, inv, block=16)
+        assert out.shape == (2, 3, 8, 16)
+        # consistency with 2d path
+        out2 = amm.sampled_matmul(x.reshape(-1, 64), w, idx, inv, block=16)
+        np.testing.assert_allclose(np.asarray(out).reshape(-1, 16),
+                                   np.asarray(out2), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.sampled_from([1, 4, 17]),
+           kblocks=st.sampled_from([2, 4, 8]),
+           f=st.sampled_from([8, 32]),
+           r=st.integers(min_value=1, max_value=8),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_variance_bounded_by_lemma1(self, n, kblocks, f, r, seed):
+        """Property: E||err|| <= ||X[j]|| ||W||_F / sqrt(r) (paper Lemma 1).
+
+        Estimated over 256 trials; allow 25% slack for MC noise on the
+        *expectation* estimate (the bound itself is loose for W-only p).
+        """
+        block = 16
+        d = kblocks * block
+        key = jax.random.PRNGKey(seed)
+        kx, kw, ks = jax.random.split(key, 3)
+        x = _rand(kx, (n, d))
+        w = _rand(kw, (d, f))
+        probs = amm.block_probs(w, block=block)
+        exact = x @ w
+
+        def one(k):
+            idx, inv = amm.draw_block_samples(k, probs, r)
+            return amm.sampled_matmul(x, w, idx, inv, block=block)
+
+        trials = jax.vmap(one)(jax.random.split(ks, 256))
+        err = jnp.linalg.norm(trials - exact[None], axis=-1)  # [T, n]
+        mean_err = jnp.mean(err, axis=0)                      # [n]
+        bound = (jnp.linalg.norm(x, axis=-1)
+                 * jnp.linalg.norm(w) / np.sqrt(r))
+        assert bool(jnp.all(mean_err <= 1.25 * bound)), (
+            f"Lemma-1 bound violated: {mean_err} vs {bound}")
+
+    def test_error_decreases_with_r(self):
+        key = jax.random.PRNGKey(7)
+        kx, kw, ks = jax.random.split(key, 3)
+        x = _rand(kx, (32, 256))
+        w = _rand(kw, (256, 64))
+        probs = amm.block_probs(w, block=32)
+        exact = x @ w
+
+        def mean_err(r):
+            def one(k):
+                idx, inv = amm.draw_block_samples(k, probs, r)
+                return amm.sampled_matmul(x, w, idx, inv, block=32)
+            trials = jax.vmap(one)(jax.random.split(ks, 128))
+            return float(jnp.mean(jnp.linalg.norm(trials - exact[None],
+                                                  axis=(-2, -1))))
+
+        errs = [mean_err(r) for r in (1, 4, 16)]
+        assert errs[0] > errs[1] > errs[2]
+
+
+class TestFlopsAccounting:
+    def test_exact_flops(self):
+        assert amm.exact_flops(10, 64, 32) == 2 * 10 * 64 * 32
+
+    def test_sampled_flops_scalar_and_array(self):
+        assert amm.sampled_flops(4, 32, block=16) == 2 * 4 * 16 * 32
+        arr = jnp.asarray([1, 2, 3])
+        assert int(amm.sampled_flops(arr, 8, block=16)) == 2 * 6 * 16 * 8

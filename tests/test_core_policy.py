@@ -1,0 +1,219 @@
+"""Tests for the MCA schedule, tier routing, and mca_project policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MCAConfig, amm, dispatch, error_bounds, mca_project,
+                        schedule)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestSchedule:
+    def test_eq9_r_schedule(self):
+        # sqrt(r) = n*maxA/alpha  ->  r = (n*maxA/alpha)^2
+        n, d, alpha = 128, 768, 0.5
+        colmax = jnp.asarray([1.0 / n, 0.01, 0.5, 1.0])
+        r = schedule.r_cols_from_attention(colmax, n, alpha, d)
+        expected = np.clip((n * np.asarray(colmax) / alpha) ** 2, 1, d)
+        np.testing.assert_allclose(np.asarray(r), expected, rtol=1e-6)
+
+    def test_r_clipped_to_d(self):
+        r = schedule.r_cols_from_attention(jnp.asarray([1.0]), 4096, 0.1, 512)
+        assert float(r[0]) == 512.0
+
+    def test_tier_ladder_ends_exact(self):
+        lad = schedule.tier_ladder(1024, 128, n_tiers=4)
+        assert lad == (1, 2, 4, 8)
+        assert lad[-1] == 1024 // 128
+        lad2 = schedule.tier_ladder(256, 128, n_tiers=8)
+        assert lad2 == (1, 2)   # ladder truncates at K
+
+    def test_assign_tiers_conservative(self):
+        lad = (1, 2, 4, 8)
+        r = jnp.asarray([1, 2, 3, 4, 5, 8])
+        t = schedule.assign_tiers(r, lad)
+        # 3 -> tier with R=4, 5 -> tier with R=8 (round UP, never down)
+        np.testing.assert_array_equal(np.asarray(t), [0, 1, 2, 2, 3, 3])
+
+    def test_importance_from_attention(self):
+        a = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0),
+                                             (2, 4, 8, 8)), axis=-1)
+        col = schedule.importance_from_attention(a)
+        assert col.shape == (2, 8)
+        ref = np.asarray(a).max(axis=(1, 2))
+        np.testing.assert_allclose(np.asarray(col), ref, rtol=1e-6)
+
+
+class TestCapacityRouting:
+    def test_no_overflow_identity(self):
+        tier = jnp.asarray([0, 1, 2, 2, 1, 0])
+        imp = jnp.arange(6.0)
+        out = dispatch.apply_capacity(tier, imp, caps=(6, 6, 6))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(tier))
+
+    def test_overflow_demotes_lowest_importance(self):
+        # four tokens want tier 2 but cap is 2 -> two lowest-importance demote
+        tier = jnp.asarray([2, 2, 2, 2])
+        imp = jnp.asarray([0.9, 0.1, 0.8, 0.2])
+        out = np.asarray(dispatch.apply_capacity(tier, imp, caps=(4, 4, 2)))
+        np.testing.assert_array_equal(out, [2, 1, 2, 1])
+
+    def test_cascade_demotion_to_tier0(self):
+        tier = jnp.asarray([2, 2, 2])
+        imp = jnp.asarray([3.0, 2.0, 1.0])
+        out = np.asarray(dispatch.apply_capacity(tier, imp, caps=(3, 1, 1)))
+        np.testing.assert_array_equal(out, [2, 1, 0])
+
+
+class TestTieredMatmul:
+    def test_exact_tier_only_matches_dense(self):
+        """All tokens in the exact tier -> bit-exact projection (no sampling)."""
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (12, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+        lad = (1, 4)  # K = 4 with block 16
+        tier = jnp.full((12,), 1, jnp.int32)
+        imp = jnp.ones((12,))
+        y = dispatch.tiered_mca_matmul(key, x, w, tier, imp, lad,
+                                       caps=(12, 12), block=16)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_mixed_tiers_unbiased(self):
+        kx = jax.random.PRNGKey(2)
+        x = jax.random.normal(kx, (16, 128))
+        w = jax.random.normal(jax.random.PRNGKey(3), (128, 32))
+        lad = (1, 2, 8)
+        tier = jnp.asarray([0, 1] * 8, jnp.int32)
+        imp = jnp.linspace(0, 1, 16)
+
+        def one(k):
+            return dispatch.tiered_mca_matmul(k, x, w, tier, imp, lad,
+                                              caps=(16, 16, 16), block=16)
+        trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(4), 1024))
+        est = jnp.mean(trials, axis=0)
+        rel = float(jnp.linalg.norm(est - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.08, rel
+
+
+class TestPerTokenMatmul:
+    def test_full_r_exact(self):
+        """r_j = K for every token makes counts a multinomial with mean cover;
+        bias check via trial mean."""
+        x = jax.random.normal(jax.random.PRNGKey(5), (8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(6), (64, 16))
+
+        def one(k):
+            return dispatch.per_token_mca_matmul(
+                k, x, w, jnp.full((8,), 4, jnp.int32), block=16)
+        trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(7), 2048))
+        est = jnp.mean(trials, axis=0)
+        rel = float(jnp.linalg.norm(est - x @ w) / jnp.linalg.norm(x @ w))
+        assert rel < 0.05, rel
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_per_token_lemma1(self, seed):
+        block, kb, f, n = 16, 8, 24, 32
+        d = block * kb
+        key = jax.random.PRNGKey(seed)
+        kx, kw, kr, ks = jax.random.split(key, 4)
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (d, f))
+        r = jax.random.randint(kr, (n,), 1, kb + 1)
+
+        def one(k):
+            return dispatch.per_token_mca_matmul(k, x, w, r, block=block)
+        trials = jax.vmap(one)(jax.random.split(ks, 256))
+        err = jnp.mean(jnp.linalg.norm(trials - (x @ w)[None], axis=-1), 0)
+        bound = error_bounds.lemma1_bound(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(w), r)
+        assert bool(jnp.all(err <= 1.25 * bound))
+
+
+class TestMcaProject:
+    def _setup(self, n=32, d=128, f=64, seq=32):
+        kx, kw, ki = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (d, f)) / np.sqrt(d)
+        imp = jax.random.uniform(ki, (n,), minval=0.0, maxval=1.0)
+        return x, w, imp
+
+    def test_disabled_is_exact(self):
+        x, w, imp = self._setup()
+        cfg = MCAConfig(enabled=False)
+        y, stats = mca_project(jax.random.PRNGKey(1), x, w, imp, 32, cfg, "v_proj")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=2e-4, atol=2e-4)
+        assert stats["mca_flops"] == stats["exact_flops"]
+
+    def test_inactive_site_is_exact(self):
+        x, w, imp = self._setup()
+        cfg = MCAConfig(enabled=True, sites=("o_proj",))
+        y, stats = mca_project(jax.random.PRNGKey(1), x, w, imp, 32, cfg, "v_proj")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_enabled_reduces_flops(self):
+        x, w, imp = self._setup()
+        # low importance everywhere -> most tokens land in cheap tiers
+        imp = imp * 0.01
+        cfg = MCAConfig(enabled=True, alpha=0.5, block=16, sites=("v_proj",))
+        y, stats = mca_project(jax.random.PRNGKey(1), x, w, imp, 32, cfg, "v_proj")
+        assert y.shape == (32, 64)
+        assert float(stats["mca_flops"]) < stats["exact_flops"]
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_alpha_zero_limit_is_high_precision(self):
+        """alpha -> 0 pushes every token to the exact tier (r = d)."""
+        x, w, imp = self._setup()
+        cfg = MCAConfig(enabled=True, alpha=1e-6, block=16, sites=("v_proj",),
+                        capacity_fracs=(1.0, 1.0, 1.0, 1.0))
+        y, stats = mca_project(jax.random.PRNGKey(1), x, w, imp, 32, cfg, "v_proj")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=2e-4, atol=2e-4)
+        assert int(stats["tier_hist"][-1]) == 32
+
+    def test_per_token_mode(self):
+        x, w, imp = self._setup()
+        cfg = MCAConfig(enabled=True, alpha=0.4, block=16, mode="per_token",
+                        sites=("v_proj",))
+        y, stats = mca_project(jax.random.PRNGKey(1), x, w, imp, 32, cfg, "v_proj")
+        assert y.shape == (32, 64)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_batched_input(self):
+        x, w, imp = self._setup()
+        xb = x.reshape(2, 16, 128)
+        impb = imp.reshape(2, 16)
+        cfg = MCAConfig(enabled=True, alpha=0.4, block=16, sites=("v_proj",))
+        y, _ = mca_project(jax.random.PRNGKey(1), xb, w, impb, 16, cfg, "v_proj")
+        assert y.shape == (2, 16, 64)
+
+    def test_theorem2_bound_end_to_end(self):
+        """E||Ytilde - Y|| <= alpha * beta * ||W||_F (Eq. 10), per output row."""
+        n, d, f = 24, 128, 64
+        kq, kx, kw = jax.random.split(jax.random.PRNGKey(9), 3)
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (d, f)) / np.sqrt(d)
+        attn = jax.nn.softmax(
+            jax.random.normal(kq, (n, n)) * 2.0, axis=-1)
+        colmax = jnp.max(attn, axis=0)
+        alpha = 0.4
+        cfg = MCAConfig(enabled=True, alpha=alpha, block=16,
+                        mode="per_token", sites=("v_proj",))
+
+        def one(k):
+            h, _ = mca_project(k, x, w, colmax, n, cfg, "v_proj")
+            return attn @ h
+        trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(10), 256))
+        y = attn @ (x @ w)
+        err = jnp.mean(jnp.linalg.norm(trials - y[None], axis=-1), axis=0)
+        beta = error_bounds.beta_of(x)
+        bound = error_bounds.theorem2_mean_bound(alpha, beta,
+                                                 jnp.linalg.norm(w))
+        assert bool(jnp.all(err <= 1.25 * bound)), (
+            f"max err {float(err.max())} vs bound {float(bound)}")

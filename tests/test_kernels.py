@@ -1,0 +1,172 @@
+"""Per-kernel allclose tests vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import amm
+from repro.kernels import (attn_colmax, flash_attention, mca_matmul,
+                           mca_matmul_ragged)
+from repro.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------- mca_matmul
+@pytest.mark.parametrize("m,d,f,block,r", [
+    (128, 512, 128, 128, 3),
+    (256, 1024, 256, 128, 8),
+    (128, 256, 384, 128, 1),
+    (64, 256, 64, 64, 5),        # small blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mca_matmul_fixed_matches_ref(m, d, f, block, r, dtype):
+    key = jax.random.PRNGKey(m + d + r)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, d), dtype=dtype)
+    w = jax.random.normal(kw, (d, f), dtype=dtype)
+    probs = amm.block_probs(w, block)
+    idx, inv_rp = amm.draw_block_samples(ks, probs, r)
+    out = mca_matmul(x, w, idx, inv_rp, block=block)
+    ref = kref.ref_mca_matmul_fixed(x, w, idx, inv_rp, block)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_mca_matmul_fixed_matches_core_sampled_matmul():
+    """Kernel == core estimator == unbiased AMM path used by the policy."""
+    key = jax.random.PRNGKey(0)
+    kx, kw, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (128, 512))
+    w = jax.random.normal(kw, (512, 128))
+    probs = amm.block_probs(w, 128)
+    idx, inv_rp = amm.draw_block_samples(ks, probs, 4)
+    out_kernel = mca_matmul(x, w, idx, inv_rp, block=128)
+    out_core = amm.sampled_matmul(x, w, idx, inv_rp, block=128)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_core),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,d,f,block,block_m,rmax", [
+    (256, 512, 128, 128, 128, 4),
+    (512, 1024, 256, 128, 128, 8),
+])
+def test_mca_matmul_ragged_matches_ref(m, d, f, block, block_m, rmax):
+    key = jax.random.PRNGKey(7)
+    kx, kw, kr, ks = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (m, d))
+    w = jax.random.normal(kw, (d, f))
+    m_tiles = m // block_m
+    r_tile = jax.random.randint(kr, (m_tiles,), 1, rmax + 1)
+    probs = amm.block_probs(w, block)
+    idx = jax.random.categorical(ks, jnp.log(probs), shape=(m_tiles, rmax))
+    inv_rp = 1.0 / (r_tile[:, None] * probs[idx])
+    out = mca_matmul_ragged(x, w, r_tile, idx, inv_rp, block=block,
+                            block_m=block_m)
+    ref = kref.ref_mca_matmul_ragged(x, w, np.asarray(r_tile),
+                                     idx, inv_rp, block, block_m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,dh", [
+    (1, 2, 2, 128, 128, 64),       # MHA square
+    (2, 4, 2, 128, 128, 64),       # GQA
+    (1, 8, 1, 256, 256, 128),      # MQA
+    (1, 2, 2, 128, 256, 64),       # cross / history (non-causal)
+])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, dh, causal, dtype):
+    if causal and sq != skv:
+        pytest.skip("causal offset covered by square cases")
+    key = jax.random.PRNGKey(b * 100 + sq)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, sq, dh), dtype=dtype)
+    k = jax.random.normal(kk, (b, hkv, skv, dh), dtype=dtype)
+    v = jax.random.normal(kv, (b, hkv, skv, dh), dtype=dtype)
+    scale = 1.0 / np.sqrt(dh)
+    out, lse = flash_attention(q, k, v, scale=scale, causal=causal,
+                               block_q=64, block_k=64)
+    ref_out, ref_lse = kref.ref_attention(q, k, v, scale=scale, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------- attn_colmax
+@pytest.mark.parametrize("b,hq,hkv,s,dh", [
+    (1, 2, 2, 128, 64),
+    (2, 4, 2, 256, 64),
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_attn_colmax_matches_ref(b, hq, hkv, s, dh, causal):
+    key = jax.random.PRNGKey(s)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, s, dh))
+    k = jax.random.normal(kk, (b, hkv, s, dh))
+    v = jax.random.normal(kv, (b, hkv, s, dh))
+    scale = 1.0 / np.sqrt(dh)
+    _, lse = flash_attention(q, k, v, scale=scale, causal=causal,
+                             block_q=64, block_k=64)
+    cm = attn_colmax(q, k, lse, scale=scale, causal=causal, block_q=64,
+                     block_k=64, reduce_heads=False)
+    ref = kref.ref_colmax(q, k, lse, scale=scale, causal=causal)
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_colmax_is_valid_probability_mass(s=128):
+    """colmax entries are in (0, 1] and every column someone attends to
+    strongly is ~1 under a diagonal-dominant score matrix."""
+    q = jnp.eye(s, 64)[None, None] * 10
+    k = jnp.eye(s, 64)[None, None] * 10
+    v = jnp.ones((1, 1, s, 64))
+    _, lse = flash_attention(q, k, v, scale=1.0, causal=False)
+    cm = attn_colmax(q, k, lse, scale=1.0, causal=False)
+    assert float(cm.min()) > 0.0
+    assert float(cm.max()) <= 1.0 + 1e-5
+    assert float(cm[0, :64].min()) > 0.5  # diagonal keys dominate
+
+
+def test_colmax_feeds_schedule_end_to_end():
+    """flash lse -> colmax -> Eq.9 schedule produces sane r values."""
+    from repro.core import schedule
+    key = jax.random.PRNGKey(3)
+    b, h, s, dh, d = 2, 4, 128, 64, 512
+    q, k, v = (jax.random.normal(kk, (b, h, s, dh))
+               for kk in jax.random.split(key, 3))
+    scale = 1.0 / np.sqrt(dh)
+    _, lse = flash_attention(q, k, v, scale=scale, causal=True)
+    cm = attn_colmax(q, k, lse, scale=scale, causal=True)   # [B, S]
+    r = schedule.r_cols_from_attention(cm, s, alpha=0.4, d=d)
+    assert r.shape == (b, s)
+    assert bool(jnp.all((r >= 1.0) & (r <= d)))
+
+
+def test_tiered_dispatch_kernel_path_matches_jnp():
+    """use_kernel=True (Pallas interpret) == jnp path inside the tiered
+    dispatch (Mode-C integration; same RNG -> identical sample sets)."""
+    from repro.core import dispatch
+    key = jax.random.PRNGKey(0)
+    kx, kw = jax.random.split(key)
+    n, d, f, block = 256, 512, 128, 128
+    x = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kw, (d, f))
+    tier = jnp.asarray([0, 1, 2, 3] * (n // 4), jnp.int32)
+    imp = jnp.linspace(0, 1, n)
+    ladder = (1, 2, 4, 4)
+    caps = (n, n, n, n)
+    y_ref = dispatch.tiered_mca_matmul(key, x, w, tier, imp, ladder, caps,
+                                       block=block, use_kernel=False)
+    y_ker = dispatch.tiered_mca_matmul(key, x, w, tier, imp, ladder, caps,
+                                       block=block, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
