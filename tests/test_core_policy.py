@@ -93,7 +93,9 @@ class TestTieredMatmul:
         def one(k):
             return dispatch.tiered_mca_matmul(k, x, w, tier, imp, lad,
                                               caps=(16, 16, 16), block=16)
-        trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(4), 1024))
+        # 4096 trials: expected rel ~0.035 here, so 0.08 gives >2x margin
+        # (1024 was 0.0998 at this seed — inside MC noise, not bias)
+        trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(4), 4096))
         est = jnp.mean(trials, axis=0)
         rel = float(jnp.linalg.norm(est - x @ w) / jnp.linalg.norm(x @ w))
         assert rel < 0.08, rel

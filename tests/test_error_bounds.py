@@ -1,0 +1,134 @@
+"""Property tests for core/error_bounds.py (Lemma 1 / Theorem 2).
+
+Uses ``hypothesis`` (the real package, or the deterministic shim installed
+by conftest.py when it is absent) to check the bound as a FUNCTION, then
+one empirical check that the paper's inequality — with the W-only sampling
+marginal p(b) ∝ ||W[b]||², not the optimal joint marginal — actually holds
+for the block estimator in core/amm.py (see the caveat in the
+error_bounds.py module docstring).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import amm, error_bounds
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestLemma1Function:
+    @settings(max_examples=40, deadline=None)
+    @given(xn=st.floats(0.0, 1e3), wf=st.floats(0.0, 1e3),
+           r1=st.integers(1, 4096), r2=st.integers(1, 4096))
+    def test_monotone_non_increasing_in_r(self, xn, wf, r1, r2):
+        """More samples never weakens the guarantee: r2 >= r1 implies
+        bound(r2) <= bound(r1)."""
+        lo, hi = sorted((r1, r2))
+        b_lo = float(error_bounds.lemma1_bound(
+            jnp.float32(xn), jnp.float32(wf), jnp.asarray(lo)))
+        b_hi = float(error_bounds.lemma1_bound(
+            jnp.float32(xn), jnp.float32(wf), jnp.asarray(hi)))
+        assert b_hi <= b_lo + 1e-6 * max(1.0, b_lo)
+
+    @settings(max_examples=20, deadline=None)
+    @given(xn=st.floats(1e-3, 1e3), wf=st.floats(1e-3, 1e3),
+           r=st.integers(1, 4096), c=st.floats(0.1, 10.0))
+    def test_homogeneous_in_norms(self, xn, wf, r, c):
+        """Bound scales linearly in ||X[j]|| and in ||W||_F."""
+        b = float(error_bounds.lemma1_bound(
+            jnp.float32(xn), jnp.float32(wf), jnp.asarray(r)))
+        bc = float(error_bounds.lemma1_bound(
+            jnp.float32(c * xn), jnp.float32(wf), jnp.asarray(r)))
+        np.testing.assert_allclose(bc, c * b, rtol=1e-5)
+        bw = float(error_bounds.lemma1_bound(
+            jnp.float32(xn), jnp.float32(c * wf), jnp.asarray(r)))
+        np.testing.assert_allclose(bw, c * b, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), kblocks=st.integers(1, 16))
+    def test_tight_at_full_sampling(self, seed, kblocks):
+        """At full sampling the bound is the family's infimum over r in
+        [1, K] — exactly ||X[j]|| ||W||_F / sqrt(K) — and the estimator that
+        enumerates every block once (idx = 0..K-1, inv_rp = 1) has ZERO
+        error, so full sampling saturates the guarantee trivially."""
+        block, f, n = 16, 8, 4
+        d = block * kblocks
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (d, f))
+        xn = jnp.linalg.norm(x, axis=-1)
+        wf = error_bounds.w_fro(w)
+        rs = jnp.arange(1, kblocks + 1)
+        bounds = error_bounds.lemma1_bound(xn[:, None], wf, rs[None, :])
+        # infimum at r = K ...
+        full = bounds[:, -1]
+        assert bool(jnp.all(full <= jnp.min(bounds, axis=-1) + 1e-6))
+        np.testing.assert_allclose(np.asarray(full),
+                                   np.asarray(xn * wf / np.sqrt(kblocks)),
+                                   rtol=1e-6)
+        # ... and the deterministic full-enumeration estimator achieves 0
+        idx = jnp.arange(kblocks, dtype=jnp.int32)
+        est = amm.sampled_matmul(x, w, idx, jnp.ones((kblocks,)), block)
+        err = jnp.linalg.norm(est - x @ w, axis=-1)
+        assert bool(jnp.all(err <= 1e-3 * full + 1e-5))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), alpha=st.floats(0.05, 1.0))
+    def test_theorem2_is_attention_weighted_lemma1_under_eq9(self, seed,
+                                                            alpha):
+        """Theorem 2 is exactly the attention-weighted sum of Lemma-1 bounds
+        under the Eq. 9 schedule: with sqrt(r_j) = n * maxA_j / alpha
+        (unclipped) each column contributes maxA_j * lemma1(xn_j, wf, r_j)
+        = alpha * xn_j * wf / n, so the sum over j collapses to
+        alpha * beta * ||W||_F — Eq. 10 with no slack."""
+        n, d, f = 32, 128, 16
+        kx, kw, ka = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (d, f))
+        colmax = jax.random.uniform(ka, (n,), minval=0.05, maxval=1.0)
+        xn = jnp.linalg.norm(x, axis=-1)
+        wf = error_bounds.w_fro(w)
+        r = (n * colmax / alpha) ** 2         # Eq. 9, no [1, K] clipping
+        weighted = colmax * error_bounds.lemma1_bound(xn, wf, r)
+        lhs = float(jnp.sum(weighted))
+        rhs = float(error_bounds.theorem2_mean_bound(
+            alpha, error_bounds.beta_of(x), wf))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-5)
+
+    def test_tail_bound_markov_relation(self):
+        """Eq. 11 is Eq. 10 inflated by 1/delta (Markov)."""
+        beta = jnp.float32(3.0)
+        wf = jnp.float32(2.0)
+        for delta in (0.5, 0.1, 0.01):
+            tail = float(error_bounds.theorem2_tail_bound(0.4, beta, wf, delta))
+            mean = float(error_bounds.theorem2_mean_bound(0.4, beta, wf))
+            np.testing.assert_allclose(tail, mean / delta, rtol=1e-6)
+
+
+class TestLemma1Empirical:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), r=st.integers(1, 8))
+    def test_bound_holds_for_w_marginal_sampling(self, seed, r):
+        """The PAPER's inequality with p(b) ∝ ||W[b]||² (not the optimal
+        joint marginal) holds empirically for the block estimator."""
+        block, kb, f, n = 16, 8, 12, 16
+        d = block * kb
+        kx, kw, ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(kx, (n, d))
+        w = jax.random.normal(kw, (d, f))
+        probs = amm.block_probs(w, block)
+        exact = x @ w
+
+        def one(k):
+            idx, inv_rp = amm.draw_block_samples(k, probs, r)
+            return amm.sampled_matmul(x, w, idx, inv_rp, block)
+
+        trials = jax.vmap(one)(jax.random.split(ks, 256))
+        err = jnp.mean(jnp.linalg.norm(trials - exact[None], axis=-1), axis=0)
+        bound = error_bounds.lemma1_bound(
+            jnp.linalg.norm(x, axis=-1), error_bounds.w_fro(w),
+            jnp.full((n,), r, jnp.float32))
+        assert bool(jnp.all(err <= 1.25 * bound)), (
+            float(jnp.max(err / bound)))
