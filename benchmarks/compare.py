@@ -1,0 +1,156 @@
+"""Regression gate: diff two ``benchmarks.run`` JSON reports.
+
+    python -m benchmarks.compare BASELINE.json CANDIDATE.json \
+        [--report-only] [--threshold accuracy_abs=0.1 ...]
+
+Per-metric thresholds (all overridable on the CLI):
+
+* ``timing_ratio``       — kernel us_per_call may grow at most this factor
+                           (wall-clock on shared CI is noisy; 2.5x default).
+* ``flops_reduction_rel``— relative drift allowed in each row's FLOPs
+                           reduction (deterministic given seeds; drift means
+                           the sampling schedule changed).
+* ``accuracy_abs``       — absolute accuracy drift allowed per row.
+* ``tier_hist_l1``       — L1 distance allowed between normalized tier
+                           occupancy histograms.
+
+Exit status: 0 when clean (or ``--report-only``), 1 when any regression
+is found, 2 on malformed/incomparable inputs.  Comparing a report against
+itself always exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+DEFAULT_THRESHOLDS: Dict[str, float] = {
+    "timing_ratio": 2.5,
+    "flops_reduction_rel": 0.25,
+    "accuracy_abs": 0.05,
+    "tier_hist_l1": 0.35,
+}
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(base: dict, cand: dict,
+            thresholds: Dict[str, float] = None) -> List[str]:
+    """Returns a list of human-readable regression strings (empty = clean)."""
+    th = dict(DEFAULT_THRESHOLDS)
+    if thresholds:
+        th.update(thresholds)
+    problems: List[str] = []
+
+    if base.get("schema_version") != cand.get("schema_version"):
+        raise ValueError(
+            f"schema_version mismatch: {base.get('schema_version')} vs "
+            f"{cand.get('schema_version')}")
+    if base.get("profile") != cand.get("profile"):
+        # comparable only within a profile — budgets change the numbers
+        raise ValueError(f"profile mismatch: {base.get('profile')} vs "
+                         f"{cand.get('profile')}")
+
+    # ---- kernels: timing may not blow up
+    base_k = {k["name"]: k for k in base.get("kernels", [])}
+    for k in cand.get("kernels", []):
+        b = base_k.get(k["name"])
+        if b is None:
+            continue                       # new kernel: not a regression
+        if b["us_per_call"] > 0:
+            ratio = k["us_per_call"] / b["us_per_call"]
+            if ratio > th["timing_ratio"]:
+                problems.append(
+                    f"kernel {k['name']}: {k['us_per_call']:.1f}us vs "
+                    f"baseline {b['us_per_call']:.1f}us "
+                    f"({ratio:.2f}x > {th['timing_ratio']}x)")
+    missing = set(base_k) - {k["name"] for k in cand.get("kernels", [])}
+    for name in sorted(missing):
+        problems.append(f"kernel {name}: present in baseline, missing in "
+                        "candidate")
+
+    # ---- tables: per-task, per-alpha rows
+    for tname, btab in (base.get("tables") or {}).items():
+        ctab = (cand.get("tables") or {}).get(tname)
+        if ctab is None:
+            problems.append(f"{tname}: missing in candidate")
+            continue
+        cmap = {t["task"]: t for t in ctab}
+        for bt in btab:
+            ct = cmap.get(bt["task"])
+            if ct is None:
+                problems.append(f"{tname}/{bt['task']}: missing in candidate")
+                continue
+            crows = {round(r["alpha"], 6): r for r in ct["rows"]}
+            for br in bt["rows"]:
+                cr = crows.get(round(br["alpha"], 6))
+                loc = f"{tname}/{bt['task']}/alpha={br['alpha']}"
+                if cr is None:
+                    problems.append(f"{loc}: row missing in candidate")
+                    continue
+                d_acc = abs(cr["acc"] - br["acc"])
+                if d_acc > th["accuracy_abs"]:
+                    problems.append(
+                        f"{loc}: acc {cr['acc']:.4f} vs {br['acc']:.4f} "
+                        f"(|delta|={d_acc:.4f} > {th['accuracy_abs']})")
+                if br["flops_reduction"] > 0:
+                    rel = abs(cr["flops_reduction"] - br["flops_reduction"]
+                              ) / br["flops_reduction"]
+                    if rel > th["flops_reduction_rel"]:
+                        problems.append(
+                            f"{loc}: flops_reduction "
+                            f"{cr['flops_reduction']:.3f} vs "
+                            f"{br['flops_reduction']:.3f} "
+                            f"(rel={rel:.3f} > {th['flops_reduction_rel']})")
+                bh, ch = br.get("tier_hist"), cr.get("tier_hist")
+                if bh and ch and len(bh) == len(ch):
+                    l1 = sum(abs(a - b) for a, b in zip(bh, ch))
+                    if l1 > th["tier_hist_l1"]:
+                        problems.append(
+                            f"{loc}: tier_hist L1 drift {l1:.3f} > "
+                            f"{th['tier_hist_l1']}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--report-only", action="store_true",
+                    help="print regressions but always exit 0")
+    ap.add_argument("--threshold", action="append", default=[],
+                    metavar="NAME=VALUE",
+                    help=f"override a threshold; known: "
+                         f"{', '.join(DEFAULT_THRESHOLDS)}")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for spec in args.threshold:
+        name, _, val = spec.partition("=")
+        if name not in DEFAULT_THRESHOLDS or not val:
+            print(f"unknown threshold {spec!r}", file=sys.stderr)
+            return 2
+        overrides[name] = float(val)
+
+    try:
+        problems = compare(_load(args.baseline), _load(args.candidate),
+                           overrides)
+    except (ValueError, KeyError, OSError, json.JSONDecodeError) as e:
+        print(f"compare failed: {e}", file=sys.stderr)
+        return 2
+
+    if problems:
+        print(f"{len(problems)} regression(s) vs {args.baseline}:")
+        for p in problems:
+            print(f"  REGRESSION {p}")
+        return 0 if args.report_only else 1
+    print(f"clean: {args.candidate} within thresholds of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

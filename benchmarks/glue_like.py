@@ -138,8 +138,11 @@ def evaluate(params, cfg, task: Task, *, mca_key=None, n_eval=512,
     acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(b["label"])))
     exact = float(stats["exact_flops"])
     mca = float(stats["mca_flops"])
+    hist = np.asarray(stats["tier_hist"], np.float64)
+    total = hist.sum()
     return {"acc": acc, "flops_reduction": exact / max(mca, 1.0),
-            "exact_flops": exact, "mca_flops": mca}
+            "exact_flops": exact, "mca_flops": mca,
+            "tier_hist": (hist / max(total, 1.0)).tolist()}
 
 
 def mca_sweep(params, cfg, task: Task, alphas, *, n_seeds=8, mode="per_token",
@@ -149,22 +152,28 @@ def mca_sweep(params, cfg, task: Task, alphas, *, n_seeds=8, mode="per_token",
     rows = []
     base = evaluate(params, cfg, task, mca_key=None, n_eval=n_eval)
     rows.append({"alpha": 0.0, "acc": base["acc"], "ci95": 0.0,
-                 "flops_reduction": 1.0})
+                 "acc_delta": 0.0, "flops_reduction": 1.0,
+                 "tier_hist": base["tier_hist"]})
     for alpha in alphas:
         cfg_a = cfg.replace(mca=MCAConfig(
             enabled=True, alpha=alpha, block=16, mode=mode, sites=sites))
-        accs, reds = [], []
+        accs, reds, hists = [], [], []
         for s in range(n_seeds):
             r = evaluate(params, cfg_a, task,
                          mca_key=jax.random.PRNGKey(1000 + s),
                          n_eval=n_eval)
             accs.append(r["acc"])
             reds.append(r["flops_reduction"])
+            hists.append(r["tier_hist"])
         accs = np.asarray(accs)
+        ci = (1.96 * accs.std(ddof=1) / np.sqrt(len(accs))
+              if len(accs) > 1 else 0.0)
         rows.append({
             "alpha": alpha,
             "acc": float(accs.mean()),
-            "ci95": float(1.96 * accs.std(ddof=1) / np.sqrt(len(accs))),
+            "ci95": float(ci),
+            "acc_delta": float(accs.mean() - base["acc"]),
             "flops_reduction": float(np.mean(reds)),
+            "tier_hist": np.mean(np.asarray(hists), axis=0).tolist(),
         })
     return rows, base

@@ -1,89 +1,109 @@
 """Benchmark entrypoint: one function per paper table.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's
-headline number).  ``--full`` runs paper-scale task counts/seeds; default
-is the fast profile so `python -m benchmarks.run` completes on CPU."""
+headline number) and writes a schema-stable JSON report consumable by
+``benchmarks.compare``:
+
+    {"schema_version": 1, "profile": "smoke|fast|full",
+     "kernels": [...], "tables": {"table1": [...], ...},
+     "fig1": {...}|null, "roofline_summary": {...}|null,
+     "obs": <repro.obs registry snapshot>}
+
+Profiles: ``full`` = paper-scale task counts/seeds; ``fast`` (default)
+completes on CPU in minutes; ``smoke`` is the CI budget (~1-2 min) —
+schema-identical, numbers undertrained/noisy by design."""
 from __future__ import annotations
 
 import argparse
 import json
 import time
 
+from repro import obs
+
+SCHEMA_VERSION = 1
+
 
 def _csv(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
 
 
+def _mean_reduction(table):
+    red = [row["flops_reduction"] for r in table for row in r["rows"][1:]]
+    return sum(red) / max(len(red), 1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--profile", choices=("smoke", "fast", "full"),
+                    default="fast")
+    ap.add_argument("--full", action="store_true",
+                    help="legacy alias for --profile full")
     ap.add_argument("--json-out", default="bench_results.json")
     args = ap.parse_args()
-    fast = not args.full
-    results = {}
+    profile = "full" if args.full else args.profile
+    fast = profile != "full"
+    smoke = profile == "smoke"
 
-    from . import kernel_bench
-    kb = kernel_bench.run(fast=fast)
-    results["kernels"] = kb
-    for r in kb:
-        _csv(r["name"], r["us_per_call"],
-             r.get("flops_reduction", r.get("colmax_overhead", "")))
+    reg = obs.Registry()
+    tables = {}
+    fig1 = None
+    roofline_summary = None
+    with obs.scoped(reg), obs.trace("benchmarks.run"):
+        from . import kernel_bench
+        kb = kernel_bench.run(fast=fast)
+        for r in kb:
+            _csv(r["name"], r["us_per_call"],
+                 r.get("flops_reduction", r.get("colmax_overhead", "")))
 
-    from . import table1_bert
-    t0 = time.time()
-    t1 = table1_bert.run(fast=fast)
-    results["table1"] = t1
-    us = (time.time() - t0) * 1e6
-    red = [row["flops_reduction"] for r in t1 for row in r["rows"][1:]]
-    acc_drop = [r["baseline_acc"] - r["rows"][1]["acc"] for r in t1]
-    _csv("table1_mca_bert", us / max(len(red), 1),
-         f"mean_flops_reduction={sum(red) / len(red):.2f}x"
-         f";acc_drop_a0.2={sum(acc_drop) / len(acc_drop):.4f}")
+        from . import table1_bert, table2_distilbert, table3_longformer
+        for name, mod in (("table1", table1_bert),
+                          ("table2", table2_distilbert),
+                          ("table3", table3_longformer)):
+            t0 = time.time()
+            tab = mod.run(fast=fast, smoke=smoke)
+            wall = time.time() - t0
+            tables[name] = tab
+            reg.histogram(f"bench.{name}.wall_seconds").observe(wall)
+            _csv(f"{name}_mca", wall * 1e6 / max(len(tab), 1),
+                 f"mean_flops_reduction={_mean_reduction(tab):.2f}x")
 
-    from . import table2_distilbert
-    t0 = time.time()
-    t2 = table2_distilbert.run(fast=fast)
-    results["table2"] = t2
-    us = (time.time() - t0) * 1e6
-    red = [row["flops_reduction"] for r in t2 for row in r["rows"][1:]]
-    _csv("table2_mca_distilbert", us / max(len(red), 1),
-         f"mean_flops_reduction={sum(red) / len(red):.2f}x")
+        if not smoke:
+            from . import fig1_tradeoff
+            t0 = time.time()
+            fig1 = fig1_tradeoff.run(fast=fast)
+            knee = min((row for row in fig1["bert"]["rows"][1:]),
+                       key=lambda r: abs(r["acc"]
+                                         - fig1["bert"]["baseline_acc"]
+                                         + 0.01))
+            _csv("fig1_tradeoff", (time.time() - t0) * 1e6 / 8,
+                 f"knee_alpha={knee['alpha']};"
+                 f"knee_flops={knee['flops_reduction']:.2f}x")
 
-    from . import table3_longformer
-    t0 = time.time()
-    t3 = table3_longformer.run(fast=fast)
-    results["table3"] = t3
-    us = (time.time() - t0) * 1e6
-    red = [row["flops_reduction"] for r in t3 for row in r["rows"][1:]]
-    _csv("table3_mca_longformer", us / max(len(red), 1),
-         f"mean_flops_reduction={sum(red) / len(red):.2f}x")
+        # roofline summary from the dry-run cache (if present)
+        try:
+            from . import roofline
+            rows = roofline.load_results()
+            if rows:
+                roofline_summary = roofline.summary(rows)
+                _csv("roofline_dryrun", 0.0,
+                     f"cells={roofline_summary['cells']};"
+                     f"compiled={roofline_summary['compiled']};"
+                     f"fits={roofline_summary['fits_hbm']}")
+        except Exception:                                 # noqa: BLE001
+            pass
 
-    from . import fig1_tradeoff
-    t0 = time.time()
-    f1 = fig1_tradeoff.run(fast=fast)
-    results["fig1"] = f1
-    us = (time.time() - t0) * 1e6
-    knee = min((row for row in f1["bert"]["rows"][1:]),
-               key=lambda r: abs(r["acc"] - f1["bert"]["baseline_acc"]
-                                 + 0.01))
-    _csv("fig1_tradeoff", us / 8,
-         f"knee_alpha={knee['alpha']};knee_flops={knee['flops_reduction']:.2f}x")
-
-    # roofline summary from the dry-run cache (if present)
-    try:
-        from . import roofline
-        rows = roofline.load_results()
-        if rows:
-            s = roofline.summary(rows)
-            _csv("roofline_dryrun", 0.0,
-                 f"cells={s['cells']};compiled={s['compiled']};"
-                 f"fits={s['fits_hbm']}")
-            results["roofline_summary"] = s
-    except Exception:                                     # noqa: BLE001
-        pass
-
+    out = {
+        "schema_version": SCHEMA_VERSION,
+        "profile": profile,
+        "kernels": kb,
+        "tables": tables,
+        "fig1": fig1,
+        "roofline_summary": roofline_summary,
+        "obs": reg.snapshot(),
+    }
     with open(args.json_out, "w") as f:
-        json.dump(results, f, indent=1, default=float)
+        json.dump(out, f, indent=1, default=float)
+    print(f"wrote {args.json_out} (profile={profile})")
 
 
 if __name__ == "__main__":

@@ -18,17 +18,25 @@ TASKS = (
 )
 
 
-def run(fast: bool = False, n_layers: int = 4):
-    tasks = TASKS[:2] if fast else TASKS
-    steps = 120 if fast else 300
-    n_seeds = 4 if fast else 8
-    n_eval = 256 if fast else 512
+def run(fast: bool = False, n_layers: int = 4, smoke: bool = False):
+    # smoke: CI-budget profile (~tens of seconds) — schema-identical to
+    # fast/full, numbers are noisy/undertrained by design
+    if smoke:
+        tasks, steps, n_seeds, n_eval = TASKS[:1], 60, 2, 128
+        alphas = (0.2, 1.0)
+        n_layers = min(n_layers, 2)
+    else:
+        tasks = TASKS[:2] if fast else TASKS
+        steps = 120 if fast else 300
+        n_seeds = 4 if fast else 8
+        n_eval = 256 if fast else 512
+        alphas = ALPHAS
     out = []
     for task in tasks:
         cfg = G.bert_config(n_layers=n_layers, seq_len=task.seq_len,
                             vocab=task.vocab)
         params = G.train_classifier(task, cfg, steps=steps, seed=task.seed)
-        rows, base = G.mca_sweep(params, cfg, task, ALPHAS,
+        rows, base = G.mca_sweep(params, cfg, task, alphas,
                                  n_seeds=n_seeds, n_eval=n_eval)
         out.append({"task": task.name, "baseline_acc": base["acc"],
                     "rows": rows})

@@ -6,9 +6,10 @@ from __future__ import annotations
 from . import table1_bert
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, smoke: bool = False):
     # distil = half the layers of the table-1 encoder
-    return table1_bert.run(fast=fast, n_layers=2)
+    return table1_bert.run(fast=fast, n_layers=1 if smoke else 2,
+                           smoke=smoke)
 
 
 def format_table(results) -> str:

@@ -13,18 +13,23 @@ TASKS = (
 )
 
 
-def run(fast: bool = False, window: int = 64):
-    tasks = TASKS[:1] if fast else TASKS
-    steps = 120 if fast else 300
-    n_seeds = 4 if fast else 8
+def run(fast: bool = False, window: int = 64, smoke: bool = False):
+    if smoke:
+        tasks, steps, n_seeds, n_eval = TASKS[:1], 60, 2, 128
+        alphas, n_layers = (0.2, 1.0), 2
+    else:
+        tasks = TASKS[:1] if fast else TASKS
+        steps = 120 if fast else 300
+        n_seeds = 4 if fast else 8
+        n_eval = 256 if fast else 512
+        alphas, n_layers = ALPHAS, 4
     out = []
     for task in tasks:
-        cfg = G.bert_config(n_layers=4, window=window,
+        cfg = G.bert_config(n_layers=n_layers, window=window,
                             seq_len=task.seq_len, vocab=task.vocab)
         params = G.train_classifier(task, cfg, steps=steps, seed=task.seed)
-        rows, base = G.mca_sweep(params, cfg, task, ALPHAS,
-                                 n_seeds=n_seeds,
-                                 n_eval=256 if fast else 512)
+        rows, base = G.mca_sweep(params, cfg, task, alphas,
+                                 n_seeds=n_seeds, n_eval=n_eval)
         out.append({"task": task.name, "baseline_acc": base["acc"],
                     "window": window, "rows": rows})
     return out

@@ -50,9 +50,20 @@ cfg_on = cfg_off.replace(mca=MCAConfig(enabled=True, alpha=0.3, block=16,
 model_on = build_model(cfg_on)
 eng_on = Engine(model_on, params, batch_size=2, max_len=96,
                 mca_enabled=True)
+from repro import obs
 t0 = time.time()
-out_mca = eng_on.generate(prompts, max_new=12)
+with obs.scoped() as reg:
+    out_mca = eng_on.generate(prompts, max_new=12)
+    snap = reg.snapshot()
 t_mca = time.time() - t0
+print(f"serve.flops_reduction (prefill): "
+      f"{snap['gauges']['serve.flops_reduction']:.2f}x")
+print("serve.tier_occupancy:",
+      {k.rsplit('.', 1)[-1]: int(v) for k, v in snap["counters"].items()
+       if k.startswith("serve.tier_occupancy.")})
+print(f"decode p50 "
+      f"{snap['histograms']['serve.decode_step_seconds']['p50'] * 1e3:.1f}ms"
+      f"/step")
 
 print(f"exact  : {out_exact[0].tolist()}")
 print(f"mca    : {out_mca[0].tolist()}")

@@ -140,6 +140,14 @@ def _tiered_maybe_sharded(key, x2, w, tier, imp, ladder, cfg, block):
             caps = _caps_for(flat_n // n_all, n_tiers, cfg.capacity_fracs)
 
             def local(x_l, tier_l, imp_l, key_l, w_l):
+                # key enters replicated (spec P()); fold the shard's linear
+                # index in so each shard draws independent block samples —
+                # otherwise estimator errors are perfectly correlated along
+                # the token axis and variance does not shrink with mesh size.
+                lin = 0
+                for a in axes:
+                    lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
+                key_l = jax.random.fold_in(key_l, lin)
                 tier_r = dispatch.apply_capacity(tier_l, imp_l, caps)
                 y_l = dispatch.tiered_mca_matmul(
                     key_l, x_l, w_l, tier_r, imp_l, ladder, caps, block,

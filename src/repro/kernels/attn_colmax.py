@@ -20,7 +20,7 @@ from .mca_matmul import _compiler_params
 
 
 def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, cm_ref, *,
-                   scale, causal, bq, bk, nq):
+                   scale, causal, bq, bk, nq, off):
     j = pl.program_id(2)   # kv tile
     i = pl.program_id(3)   # q tile (innermost)
 
@@ -36,15 +36,16 @@ def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, cm_ref, *,
         lse = lse_ref[0, 0][:, None]                         # [bq, 1]
         a = jnp.exp(s - lse)                                 # [bq, bk]
         if causal:
+            # diagonal offset skv - sq, as in ref_colmax's tril(k=skv - sq)
             rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            a = jnp.where(rows >= cols, a, 0.0)
+            a = jnp.where(rows + off >= cols, a, 0.0)
         cm_ref[...] = jnp.maximum(cm_ref[...],
                                   jnp.max(a, axis=0, keepdims=True))
 
     if causal:
-        # q tiles strictly above the kv tile see nothing of it
-        pl.when(i * bq + bq - 1 >= j * bk)(_compute)
+        # q tiles strictly above the (offset) kv tile see nothing of it
+        pl.when(i * bq + bq - 1 + off >= j * bk)(_compute)
     else:
         _compute()
 
@@ -72,7 +73,7 @@ def attn_colmax(q: jax.Array, k: jax.Array, lse: jax.Array, *, scale: float,
     grid = (b, hq, nk, nq)
     fn = pl.pallas_call(
         functools.partial(_colmax_kernel, scale=scale, causal=causal,
-                          bq=bq, bk=bk, nq=nq),
+                          bq=bq, bk=bk, nq=nq, off=skv - sq),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, dh), lambda bb, h, j, i: (bb, h, i, 0)),

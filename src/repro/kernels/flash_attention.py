@@ -23,7 +23,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
-                  acc_ref, m_ref, l_ref, *, scale, causal, bq, bk, nk):
+                  acc_ref, m_ref, l_ref, *, scale, causal, bq, bk, nk, off):
     i = pl.program_id(2)
     j = pl.program_id(3)
 
@@ -39,9 +39,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:
+            # diagonal offset skv - sq: query i sees keys j <= i + off
+            # (matches ref_attention's jnp.tril(..., k=skv - sq))
             rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(rows >= cols, s, NEG_INF)
+            s = jnp.where(rows + off >= cols, s, NEG_INF)
         m_prev = m_ref[...]                                # [bq, 1]
         l_prev = l_ref[...]
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -55,8 +57,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
             p, v, preferred_element_type=jnp.float32)
 
     if causal:
-        # skip tiles that are entirely above the diagonal
-        pl.when(j * bk <= i * bq + bq - 1)(_compute)
+        # skip tiles that are entirely above the (offset) diagonal
+        pl.when(j * bk <= i * bq + bq - 1 + off)(_compute)
     else:
         _compute()
 
@@ -91,7 +93,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kv_map = lambda bb, h, i, j: (bb, h // group, j, 0)
     fn = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
-                          bq=bq, bk=bk, nk=nk),
+                          bq=bq, bk=bk, nk=nk, off=skv - sq),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, dh), lambda bb, h, i, j: (bb, h, i, 0)),

@@ -3,11 +3,19 @@
 On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
 body executes as jnp on CPU), so the whole framework is testable offline
 while the compiled path targets TPU VMEM/MXU tiling.
+
+Dispatch decisions (kernel vs reference fallback) are made here on static
+shapes and recorded in the ``repro.obs`` registry as
+``kernels.<op>.kernel_calls`` / ``kernels.<op>.fallback_calls``.  These are
+*dispatch-time* counters: under ``jax.jit`` this Python runs once per
+compilation, so they count distinct traced call sites, not device launches.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 from . import attn_colmax as _colmax_mod
 from . import flash_attention as _flash_mod
@@ -19,37 +27,86 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _count(op: str, used_kernel: bool) -> None:
+    which = "kernel_calls" if used_kernel else "fallback_calls"
+    obs.get_registry().counter(f"kernels.{op}.{which}").inc()
+
+
 def mca_matmul(x: jax.Array, w: jax.Array, idx: jax.Array, inv_rp: jax.Array,
                *, block: int = 128, block_m: int = 128, block_f: int = 128
                ) -> jax.Array:
     """Fixed-R Monte-Carlo block-sampled matmul (one precision tier)."""
     m, d = x.shape
-    use_kernel = (m % min(block_m, m) == 0 and d % block == 0
-                  and w.shape[1] % min(block_f, w.shape[1]) == 0)
+    f = w.shape[1]
+    bm, bf = min(block_m, m), min(block_f, f)
+    use_kernel = m % bm == 0 and d % block == 0 and f % bf == 0
+    _count("mca_matmul", use_kernel)
     if not use_kernel:
         return _ref.ref_mca_matmul_fixed(x, w, idx, inv_rp, block)
-    return _mca_mod.mca_matmul_fixed(
-        x, w, idx, inv_rp, block=block, block_m=block_m, block_f=block_f,
-        interpret=_interpret())
+    with obs.trace("mca_matmul"):
+        return _mca_mod.mca_matmul_fixed(
+            x, w, idx, inv_rp, block=block, block_m=bm, block_f=bf,
+            interpret=_interpret())
+
+
+def _ragged_fallback(x, w, r_tile, idx, inv_rp, block, bm):
+    """Traceable oracle for the ragged kernel (masked dense gather-GEMM).
+
+    Unlike ref.ref_mca_matmul_ragged this never concretizes r_tile, so it
+    is safe inside jit; samples past r_tile[t] are masked to zero weight.
+    """
+    m, d = x.shape
+    f = w.shape[1]
+    nb = d // block
+    m_tiles, r_max = idx.shape
+    xb = x.reshape(m_tiles, bm, nb, block)
+    wb = w.reshape(nb, block, f)
+    live = jnp.arange(r_max)[None, :] < r_tile[:, None]        # [T, R]
+    wgt = jnp.where(live, inv_rp.astype(jnp.float32), 0.0)
+    xg = jnp.take_along_axis(xb, idx[:, None, :, None], axis=2)  # [T,bm,R,B]
+    wg = wb[idx]                                                 # [T,R,B,f]
+    out = jnp.einsum("tmrb,trbf,tr->tmf", xg.astype(jnp.float32),
+                     wg.astype(jnp.float32), wgt)
+    return out.reshape(m, f).astype(x.dtype)
 
 
 def mca_matmul_ragged(x, w, r_tile, idx, inv_rp, *, block=128,
                       block_m=128, block_f=128):
-    """Per-row-tile-R Monte-Carlo matmul (sorted/ragged precision)."""
-    return _mca_mod.mca_matmul_ragged(
-        x, w, r_tile, idx, inv_rp, block=block, block_m=block_m,
-        block_f=block_f, interpret=_interpret())
+    """Per-row-tile-R Monte-Carlo matmul (sorted/ragged precision).
+
+    The row-tile size is pinned by ``r_tile``'s length: the kernel needs
+    ``min(block_m, m)`` row tiles to line up with it, otherwise we fall
+    back to the dense masked oracle with ``bm = m // len(r_tile)``.
+    """
+    m, d = x.shape
+    f = w.shape[1]
+    m_tiles = r_tile.shape[0]
+    assert m % m_tiles == 0, (m, m_tiles)
+    bm, bf = min(block_m, m), min(block_f, f)
+    use_kernel = (m % bm == 0 and m // bm == m_tiles
+                  and d % block == 0 and f % bf == 0)
+    _count("mca_matmul_ragged", use_kernel)
+    if not use_kernel:
+        return _ragged_fallback(x, w, r_tile, idx, inv_rp, block,
+                                m // m_tiles)
+    with obs.trace("mca_matmul_ragged"):
+        return _mca_mod.mca_matmul_ragged(
+            x, w, r_tile, idx, inv_rp, block=block, block_m=bm,
+            block_f=bf, interpret=_interpret())
 
 
 def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128):
     """Flash attention fwd; returns (out, lse)."""
     sq, skv = q.shape[2], k.shape[2]
     bq, bk = min(block_q, sq), min(block_k, skv)
-    if sq % bq or skv % bk:
+    use_kernel = sq % bq == 0 and skv % bk == 0
+    _count("flash_attention", use_kernel)
+    if not use_kernel:
         return _ref.ref_attention(q, k, v, scale=scale, causal=causal)
-    return _flash_mod.flash_attention(
-        q, k, v, scale=scale, causal=causal, block_q=block_q,
-        block_k=block_k, interpret=_interpret())
+    with obs.trace("flash_attention"):
+        return _flash_mod.flash_attention(
+            q, k, v, scale=scale, causal=causal, block_q=bq,
+            block_k=bk, interpret=_interpret())
 
 
 def attn_colmax(q, k, lse, *, scale, causal=True, block_q=128, block_k=128,
@@ -57,12 +114,15 @@ def attn_colmax(q, k, lse, *, scale, causal=True, block_q=128, block_k=128,
     """Column max of A from (q, k, lse); optionally reduced over heads."""
     sq, skv = q.shape[2], k.shape[2]
     bq, bk = min(block_q, sq), min(block_k, skv)
-    if sq % bq or skv % bk:
+    use_kernel = sq % bq == 0 and skv % bk == 0
+    _count("attn_colmax", use_kernel)
+    if not use_kernel:
         cm = _ref.ref_colmax(q, k, lse, scale=scale, causal=causal)
     else:
-        cm = _colmax_mod.attn_colmax(
-            q, k, lse, scale=scale, causal=causal, block_q=block_q,
-            block_k=block_k, interpret=_interpret())
+        with obs.trace("attn_colmax"):
+            cm = _colmax_mod.attn_colmax(
+                q, k, lse, scale=scale, causal=causal, block_q=bq,
+                block_k=bk, interpret=_interpret())
     if reduce_heads:
         cm = jnp.max(cm, axis=1)        # [B, Skv]
     return cm

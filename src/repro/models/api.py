@@ -27,7 +27,8 @@ class Model:
     init: Callable
     loss: Callable          # (params, batch, key|None) -> (loss, metrics)
     forward_hidden: Callable
-    prefill: Callable       # (params, batch, max_len, key|None) -> (cache, hid)
+    prefill: Callable       # (params, batch, max_len, key|None)
+                            #   -> (cache, hidden, stats)
     decode: Callable        # (params, tokens, cache, t) -> (logits, cache)
     init_cache: Callable    # (batch, max_len) -> cache pytree
 
@@ -105,7 +106,16 @@ def _lm_embed(params, cfg, batch):
         px = batch["patches"].astype(x.dtype) @ params["patch_proj"]
         x = jnp.concatenate([px, x], axis=1)
     if cfg.add_sinusoidal_pos:
-        x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model, x.dtype)[None]
+        pe = sinusoidal_pos_emb(x.shape[1], cfg.d_model, x.dtype)
+        if "pos_offset" in batch:
+            # left-padded rows: embedding index counts from the first real
+            # token (pad rows clip to index 0; they are masked downstream)
+            idx = jnp.clip(jnp.arange(x.shape[1])[None]
+                           - batch["pos_offset"][:, None].astype(jnp.int32),
+                           0, None)
+            x = x + pe[idx]
+        else:
+            x = x + pe[None]
     return x
 
 
@@ -130,7 +140,8 @@ def _lm_loss(params, cfg, batch, mca_key=None):
     loss = chunked_xent(hidden, _head(params, cfg), batch["labels"], cfg)
     metrics = {"loss": loss, "aux_loss": aux,
                "mca_exact_flops": stats["exact_flops"],
-               "mca_flops": stats["mca_flops"]}
+               "mca_flops": stats["mca_flops"],
+               "mca_tier_hist": stats["tier_hist"]}
     return loss + aux, metrics
 
 
@@ -163,16 +174,38 @@ def _gqa_prefill_cache(cfg, k, v, max_len, window):
 
 # -------------------------------------------------- LM prefill / decode
 def _lm_prefill(params, cfg, batch, max_len, mca_key=None):
-    """Run the full prompt, return (cache, last_hidden)."""
+    """Run the full prompt, return (cache, last_hidden, stats).
+
+    batch may carry "pos_offset" [B] int32 left-padding amounts (number of
+    pad tokens at the front of each row). Offsets shift RoPE/positions to
+    count from the first real token and mask padding keys everywhere, so a
+    left-padded row generates exactly as it would alone.
+    """
     x = _lm_embed(params, cfg, batch)
-    pos = jnp.arange(x.shape[1])[None]
+    b, s = x.shape[0], x.shape[1]
     kind = stack.layer_kind(cfg)
 
+    off = batch.get("pos_offset")
+    if off is None:
+        pos = jnp.arange(s)[None]
+        kv_valid = None
+        off_arr = jnp.zeros((b,), jnp.int32)
+    else:
+        if kind == "ssm" or cfg.family in ("hybrid", "vlm"):
+            raise NotImplementedError(
+                f"pos_offset prefill is not supported for {cfg.family!r} "
+                "models (recurrent state has no padding mask)")
+        off_arr = off.astype(jnp.int32)
+        pos = jnp.arange(s)[None] - off_arr[:, None]
+        kv_valid = jnp.arange(s)[None] >= off_arr[:, None]
+
     if cfg.family == "hybrid":
-        return _hybrid_prefill(params, cfg, x, pos, max_len, mca_key)
+        cache, hid, stats = _hybrid_prefill(params, cfg, x, pos, max_len,
+                                            mca_key)
+        return cache, hid, stats
 
     def body(carry, inp):
-        xx = carry
+        xx, stats = carry
         p_l, idx = inp
         key_l = None if mca_key is None else jax.random.fold_in(mca_key, idx)
         h = apply_norm(p_l["ln1"], cfg, xx)
@@ -182,37 +215,41 @@ def _lm_prefill(params, cfg, batch, max_len, mca_key=None):
             xx = xx + y
             cache_l = {"state": state, "conv": conv_tail}
         elif cfg.attn_type == "mla":
-            y, (ckv, kr), _, _ = attn.mla_attention(
+            y, (ckv, kr), st, _ = attn.mla_attention(
                 p_l["mixer"], cfg, h, pos=pos, mca_key=key_l,
-                return_cache=True)
+                return_cache=True, kv_valid=kv_valid)
+            stats = stack._add_stats(stats, st)
             xx = xx + y
             ckv_p, _ = _pad_seq_cache(ckv, max_len)
             kr_p, _ = _pad_seq_cache(kr, max_len)
             cache_l = {"ckv": ckv_p, "kr": kr_p}
         else:
-            y, (k, v), _, _ = attn.gqa_attention(
+            y, (k, v), st, _ = attn.gqa_attention(
                 p_l["mixer"], cfg, h, pos=pos, mca_key=key_l,
-                return_kv=True)
+                return_kv=True, kv_valid=kv_valid)
+            stats = stack._add_stats(stats, st)
             xx = xx + y
             cache_l = _gqa_prefill_cache(cfg, k, v, max_len, cfg.window)
         if kind != "ssm":
             h = apply_norm(p_l["ln2"], cfg, xx)
             if kind == "attn_moe":
-                y, _, _ = ffn_mod.moe_ffn(p_l["ffn"], cfg, h,
-                                          mca_key=key_l)
+                y, _, st = ffn_mod.moe_ffn(p_l["ffn"], cfg, h,
+                                           mca_key=key_l)
+                stats = stack._add_stats(stats, st)
             else:
                 y = ffn_mod.ffn(p_l["ffn"], cfg, h)
             xx = xx + y
-        return xx, cache_l
+        return (xx, stats), cache_l
 
-    x, caches = maybe_scan(
-        body, x, (params["layers"], jnp.arange(cfg.n_layers)),
+    (x, stats), caches = maybe_scan(
+        body, (x, stack._zero_carry_stats(cfg)),
+        (params["layers"], jnp.arange(cfg.n_layers)),
         cfg.unroll_layers)
     x = apply_norm(params["final_norm"], cfg, x)
-    return {"layers": caches}, x
+    return {"layers": caches, "pos_off": off_arr}, x, stats
 
 
-def _decode_layer(p_l, cfg, xx, cache_l, t, kind):
+def _decode_layer(p_l, cfg, xx, cache_l, t, kind, pos_off=None):
     h = apply_norm(p_l["ln1"], cfg, xx)
     if kind == "ssm":
         y, cache_l = ssm.mamba2_decode(p_l["mixer"], cfg, h, cache_l)
@@ -221,10 +258,12 @@ def _decode_layer(p_l, cfg, xx, cache_l, t, kind):
         y, cache_l = rglru.recurrent_decode(p_l["mixer"], cfg, h, cache_l)
         xx = xx + y
     elif cfg.attn_type == "mla":
-        y, cache_l, _ = attn.mla_decode(p_l["mixer"], cfg, h, cache_l, t=t)
+        y, cache_l, _ = attn.mla_decode(p_l["mixer"], cfg, h, cache_l, t=t,
+                                        pos_off=pos_off)
         xx = xx + y
     else:
-        y, cache_l, _ = attn.gqa_decode(p_l["mixer"], cfg, h, cache_l, t=t)
+        y, cache_l, _ = attn.gqa_decode(p_l["mixer"], cfg, h, cache_l, t=t,
+                                        pos_off=pos_off)
         xx = xx + y
     h = apply_norm(p_l["ln2"], cfg, xx)
     if kind == "attn_moe":
@@ -240,17 +279,22 @@ def _lm_decode(params, cfg, tokens, cache, t):
     kind = stack.layer_kind(cfg)
     if cfg.family == "hybrid":
         return _hybrid_decode(params, cfg, x, cache, t)
+    pos_off = cache.get("pos_off")
 
     def body(xx, inp):
         p_l, cache_l = inp
-        xx, new_cache = _decode_layer(p_l, cfg, xx, cache_l, t, kind)
+        xx, new_cache = _decode_layer(p_l, cfg, xx, cache_l, t, kind,
+                                      pos_off=pos_off)
         return xx, new_cache
 
     x, new_caches = maybe_scan(body, x, (params["layers"],
                                          cache["layers"]),
                                cfg.unroll_layers)
     x = apply_norm(params["final_norm"], cfg, x)
-    return _logits(params, cfg, x), {"layers": new_caches}
+    new = {"layers": new_caches}
+    if pos_off is not None:
+        new["pos_off"] = pos_off
+    return _logits(params, cfg, x), new
 
 
 def _lm_init_cache(cfg, batch, max_len):
@@ -266,14 +310,14 @@ def _lm_init_cache(cfg, batch, max_len):
 
     caches = jax.tree.map(
         lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)])
-    return {"layers": caches}
+    return {"layers": caches, "pos_off": jnp.zeros((batch,), jnp.int32)}
 
 
 # ------------------------------------------------------- hybrid variants
 def _hybrid_prefill(params, cfg, x, pos, max_len, mca_key):
     n_groups, pat, rem = stack.hybrid_layout(cfg)
 
-    def make_cache(p_l, xx, kind, key_l):
+    def make_cache(p_l, xx, stats, kind, key_l):
         h = apply_norm(p_l["ln1"], cfg, xx)
         if kind == "rec_ffn":
             y, conv_tail, h_fin = rglru.recurrent_block_with_state(
@@ -281,35 +325,40 @@ def _hybrid_prefill(params, cfg, x, pos, max_len, mca_key):
             xx = xx + y
             cache_l = {"h": h_fin, "conv": conv_tail}
         else:
-            y, (k, v), _, _ = attn.gqa_attention(
+            y, (k, v), st, _ = attn.gqa_attention(
                 p_l["mixer"], cfg, h, pos=pos, mca_key=key_l,
                 window=cfg.window, return_kv=True)
+            stats = stack._add_stats(stats, st)
             xx = xx + y
             cache_l = _gqa_prefill_cache(cfg, k, v, max_len, cfg.window)
         h = apply_norm(p_l["ln2"], cfg, xx)
         xx = xx + ffn_mod.ffn(p_l["ffn"], cfg, h)
-        return xx, cache_l
+        return xx, stats, cache_l
 
-    def body(xx, inp):
+    def body(carry, inp):
+        xx, stats = carry
         gp, gidx = inp
         caches = {}
         for i, kind in enumerate(pat):
             key_l = None if mca_key is None else jax.random.fold_in(
                 mca_key, gidx * len(pat) + i)
-            xx, caches[f"pos{i}"] = make_cache(gp[f"pos{i}"], xx, kind, key_l)
-        return xx, caches
+            xx, stats, caches[f"pos{i}"] = make_cache(gp[f"pos{i}"], xx,
+                                                      stats, kind, key_l)
+        return (xx, stats), caches
 
-    x, gcaches = maybe_scan(body, x, (params["layers"]["groups"],
-                                      jnp.arange(n_groups)),
-                            cfg.unroll_layers)
+    (x, stats), gcaches = maybe_scan(
+        body, (x, stack._zero_carry_stats(cfg)),
+        (params["layers"]["groups"], jnp.arange(n_groups)),
+        cfg.unroll_layers)
     rem_caches = []
     for i, kind in enumerate(rem):
         key_l = None if mca_key is None else jax.random.fold_in(
             mca_key, n_groups * len(pat) + i)
-        x, c = make_cache(params["layers"]["rem"][i], x, kind, key_l)
+        x, stats, c = make_cache(params["layers"]["rem"][i], x, stats,
+                                 kind, key_l)
         rem_caches.append(c)
     x = apply_norm(params["final_norm"], cfg, x)
-    return {"groups": gcaches, "rem": rem_caches}, x
+    return {"groups": gcaches, "rem": rem_caches}, x, stats
 
 
 def _hybrid_decode(params, cfg, x, cache, t):
@@ -403,34 +452,42 @@ def _encdec_loss(params, cfg, batch, mca_key=None):
 
 
 def _encdec_prefill(params, cfg, batch, max_len, mca_key=None):
+    if batch.get("pos_offset") is not None:
+        raise NotImplementedError(
+            "pos_offset prefill is not supported for encoder-decoder models")
     enc_key = None if mca_key is None else jax.random.fold_in(mca_key, 101)
     enc_out, _ = _encode(params, cfg, batch["frames"], enc_key)
     x = embed_tokens(params["embed"], batch["tokens"])
     x = x + sinusoidal_pos_emb(x.shape[1], cfg.d_model, x.dtype)[None]
     pos = jnp.arange(x.shape[1])[None]
 
-    def body(xx, inp):
+    def body(carry, inp):
+        xx, stats = carry
         p_l, idx = inp
         key_l = None if mca_key is None else jax.random.fold_in(mca_key, idx)
         h = apply_norm(p_l["ln1"], cfg, xx)
-        y, (k, v), _, _ = attn.gqa_attention(p_l["mixer"], cfg, h, pos=pos,
-                                             mca_key=key_l, return_kv=True)
+        y, (k, v), st, _ = attn.gqa_attention(p_l["mixer"], cfg, h, pos=pos,
+                                              mca_key=key_l, return_kv=True)
+        stats = stack._add_stats(stats, st)
         xx = xx + y
         self_cache = _gqa_prefill_cache(cfg, k, v, max_len, 0)
         h = apply_norm(p_l["ln_x"], cfg, xx)
-        y, (ck, cv), _, _ = attn.gqa_attention(
+        y, (ck, cv), st, _ = attn.gqa_attention(
             p_l["cross"], cfg, h, pos=pos, mca_key=key_l, causal=False,
             window=0, kv_x=enc_out, return_kv=True)
+        stats = stack._add_stats(stats, st)
         xx = xx + y
         h = apply_norm(p_l["ln2"], cfg, xx)
         xx = xx + ffn_mod.ffn(p_l["ffn"], cfg, h)
-        return xx, {"self": self_cache, "cross_k": ck, "cross_v": cv}
+        return (xx, stats), {"self": self_cache, "cross_k": ck,
+                             "cross_v": cv}
 
-    x, caches = maybe_scan(body, x, (params["dec_layers"],
-                                     jnp.arange(cfg.n_layers)),
-                           cfg.unroll_layers)
+    (x, stats), caches = maybe_scan(
+        body, (x, stack._zero_carry_stats(cfg)),
+        (params["dec_layers"], jnp.arange(cfg.n_layers)),
+        cfg.unroll_layers)
     x = apply_norm(params["final_norm"], cfg, x)
-    return {"layers": caches}, x
+    return {"layers": caches}, x, stats
 
 
 def _cross_decode(p, cfg, x, ck, cv):

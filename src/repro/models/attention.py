@@ -56,9 +56,11 @@ def _kv_chunks(x, chunk):
 
 # --------------------------------------------------------- chunked passes
 def chunked_lse(q, k, *, scale, causal, window, chunk, q_offset=0,
-                unroll=False):
+                unroll=False, kv_valid=None):
     """Pass 1: per-query (m, lse). q: [B,Sq,Hkv,G,dh]; k: [B,Skv,Hkv,dh].
 
+    kv_valid: optional [B, Skv] bool — False marks left-padding keys that
+    must contribute nothing (score forced to NEG_INF).
     Returns (m, lse), each [B,Hkv,G,Sq] float32.
     """
     b, sq, hkv, g, dh = q.shape
@@ -73,6 +75,10 @@ def chunked_lse(q, k, *, scale, causal, window, chunk, q_offset=0,
         kpos = ci * chunk + jnp.arange(chunk)
         s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
                       s, NEG_INF)
+        if kv_valid is not None:
+            kvc = jax.lax.dynamic_slice_in_dim(kv_valid, ci * chunk, chunk,
+                                               axis=1)
+            s = jnp.where(kvc[:, None, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(s - m_new[..., None]),
                                              axis=-1)
@@ -87,8 +93,12 @@ def chunked_lse(q, k, *, scale, causal, window, chunk, q_offset=0,
 
 
 def chunked_colmax(q, k, lse, *, scale, causal, window, chunk,
-                   q_offset=0, unroll=False):
-    """max_i A[i, j] given lse — the Eq. 9 driver. Returns [B, Skv] f32."""
+                   q_offset=0, unroll=False, kv_valid=None, q_valid=None):
+    """max_i A[i, j] given lse — the Eq. 9 driver. Returns [B, Skv] f32.
+
+    kv_valid ([B, Skv]) zeroes padding key columns; q_valid ([B, Sq])
+    excludes padding query rows (their lse is garbage) from the max.
+    """
     b, sq, hkv, g, dh = q.shape
     skv = k.shape[1]
     qpos = q_offset + jnp.arange(sq)
@@ -101,6 +111,12 @@ def chunked_colmax(q, k, lse, *, scale, causal, window, chunk,
         kpos = ci * chunk + jnp.arange(chunk)
         a = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
                       a, 0.0)
+        if kv_valid is not None:
+            kvc = jax.lax.dynamic_slice_in_dim(kv_valid, ci * chunk, chunk,
+                                               axis=1)
+            a = jnp.where(kvc[:, None, None, None, :], a, 0.0)
+        if q_valid is not None:
+            a = jnp.where(q_valid[:, None, None, :, None], a, 0.0)
         return None, jnp.max(a, axis=(1, 2, 3))        # -> [B, C]
 
     _, cms = maybe_scan(jax.checkpoint(step), None,
@@ -109,7 +125,7 @@ def chunked_colmax(q, k, lse, *, scale, causal, window, chunk,
 
 
 def chunked_av(q, k, v, lse, *, scale, causal, window, chunk,
-               q_offset=0, unroll=False):
+               q_offset=0, unroll=False, kv_valid=None):
     """Pass 2: O = A @ V given lse. Returns [B,Sq,Hkv,G,dv] in v.dtype.
     (dv may differ from the q/k head dim, e.g. MLA.)"""
     b, sq, hkv, g, _ = q.shape
@@ -126,6 +142,10 @@ def chunked_av(q, k, v, lse, *, scale, causal, window, chunk,
         kpos = ci * chunk + jnp.arange(chunk)
         a = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
                       a, 0.0)
+        if kv_valid is not None:
+            kvc = jax.lax.dynamic_slice_in_dim(kv_valid, ci * chunk, chunk,
+                                               axis=1)
+            a = jnp.where(kvc[:, None, None, None, :], a, 0.0)
         acc += jnp.einsum("bhgqc,bchd->bqhgd", a.astype(v.dtype), vc,
                           preferred_element_type=jnp.float32)
         return acc, None
@@ -137,7 +157,7 @@ def chunked_av(q, k, v, lse, *, scale, causal, window, chunk,
 
 
 def onepass_attention(q, k, v, *, scale, causal, window, chunk,
-                      q_offset=0, unroll=False):
+                      q_offset=0, unroll=False, kv_valid=None):
     """Single-pass online-softmax attention (no colmax). Returns
     (out [B,Sq,Hkv,G,dv], m, lse)."""
     b, sq, hkv, g, _ = q.shape
@@ -154,6 +174,10 @@ def onepass_attention(q, k, v, *, scale, causal, window, chunk,
         kpos = ci * chunk + jnp.arange(chunk)
         s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None],
                       s, NEG_INF)
+        if kv_valid is not None:
+            kvc = jax.lax.dynamic_slice_in_dim(kv_valid, ci * chunk, chunk,
+                                               axis=1)
+            s = jnp.where(kvc[:, None, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -176,7 +200,8 @@ def onepass_attention(q, k, v, *, scale, causal, window, chunk,
 
 
 def chunked_lse_colmax_fused(q, k, *, scale, causal, window, chunk,
-                             q_offset=0, unroll=False):
+                             q_offset=0, unroll=False, kv_valid=None,
+                             q_valid=None):
     """One-pass lse + CONSERVATIVE colmax (beyond-paper optimization).
 
     True colmax needs the final lse (a second O(S^2) sweep). Folding
@@ -197,6 +222,10 @@ def chunked_lse_colmax_fused(q, k, *, scale, causal, window, chunk,
         s = _scores(q, kc, scale)
         kpos = ci * chunk + jnp.arange(chunk)
         mask = _mask(qpos, kpos, causal, window)[None, None, None]
+        if kv_valid is not None:
+            kvc = jax.lax.dynamic_slice_in_dim(kv_valid, ci * chunk, chunk,
+                                               axis=1)
+            mask = mask & kvc[:, None, None, None, :]
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(s - m_new[..., None]),
@@ -204,6 +233,8 @@ def chunked_lse_colmax_fused(q, k, *, scale, causal, window, chunk,
         lse_run = m_new + jnp.log(jnp.where(l == 0, 1.0, l))
         a_over = jnp.exp(s - lse_run[..., None])
         a_over = jnp.where(mask, a_over, 0.0)
+        if q_valid is not None:
+            a_over = jnp.where(q_valid[:, None, None, :, None], a_over, 0.0)
         cm = jnp.max(a_over, axis=(1, 2, 3))           # [B, C]
         return (m_new, l), cm
 
@@ -332,23 +363,36 @@ def _split_heads(x, n, dh):
     return x.reshape(*x.shape[:-1], n, dh)
 
 
-def _zero_stats():
+def _zero_stats(n_tiers: int):
+    """Per-layer MCA stats accumulator; tier_hist is padded to the static
+    cfg.mca.n_tiers length so it survives lax.scan carries."""
     return {"exact_flops": jnp.zeros((), jnp.float32),
-            "mca_flops": jnp.zeros((), jnp.float32)}
+            "mca_flops": jnp.zeros((), jnp.float32),
+            "tier_hist": jnp.zeros((n_tiers,), jnp.float32)}
 
 
 def _acc_stats(acc, s):
-    return {"exact_flops": acc["exact_flops"] + jnp.asarray(
-                s["exact_flops"], jnp.float32),
-            "mca_flops": acc["mca_flops"] + jnp.asarray(
-                s["mca_flops"], jnp.float32)}
+    out = {"exact_flops": acc["exact_flops"] + jnp.asarray(
+               s["exact_flops"], jnp.float32),
+           "mca_flops": acc["mca_flops"] + jnp.asarray(
+               s["mca_flops"], jnp.float32),
+           "tier_hist": acc["tier_hist"]}
+    if "tier_hist" in s:
+        # the ladder may be shorter than n_tiers for small d; pad with
+        # zeros at the exact end
+        h = jnp.asarray(s["tier_hist"], jnp.float32)
+        out["tier_hist"] = out["tier_hist"].at[:h.shape[0]].add(h)
+    return out
 
 
 def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
-                  window=None, kv_x=None, return_kv=False):
+                  window=None, kv_x=None, return_kv=False, kv_valid=None):
     """Full-sequence (train / prefill) GQA attention with MCA on V/O.
 
     x: [B, S, d]; kv_x: cross-attention source (defaults to x);
+    kv_valid: optional [B, S] bool marking real (non-left-padding) tokens
+    of the self-attention sequence — padding keys are masked out of
+    scores/colmax and padding query rows out of rowmax.
     Returns (y, kv_or_None, stats).
     """
     causal = cfg.causal if causal is None else causal
@@ -359,7 +403,9 @@ def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
     hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     dh = cfg.d_head
     scale = dh ** -0.5
-    stats = _zero_stats()
+    stats = _zero_stats(cfg.mca.n_tiers)
+    # in self-attention, query validity is key validity
+    q_valid = kv_valid if kv_x is None else None
     # TP-friendly head grouping: when KV heads can't shard over "model" but
     # the full q-head count can, repeat KV to H heads (g=1) so the single
     # head dim shards cleanly (Megatron GQA-TP; repeat is a local
@@ -405,7 +451,9 @@ def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
 
     chunk = pick_chunk(skv, cfg.attn_chunk)
     mca_v = cfg.mca.active("v_proj") and mca_key is not None
-    banded = _use_banded(cfg, window, skv, causal, kv_x)
+    # the banded gather path has no padding-mask support; fall back to the
+    # chunked passes for ragged (left-padded) batches
+    banded = _use_banded(cfg, window, skv, causal, kv_x) and kv_valid is None
 
     if mca_v:
         if banded:
@@ -415,14 +463,16 @@ def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
         elif cfg.mca.fast_colmax:
             m, lse, colmax = chunked_lse_colmax_fused(
                 qg, k, scale=scale, causal=causal, window=window,
-                chunk=chunk, unroll=cfg.unroll_inner)
+                chunk=chunk, unroll=cfg.unroll_inner, kv_valid=kv_valid,
+                q_valid=q_valid)
         else:
             m, lse = chunked_lse(qg, k, scale=scale, causal=causal,
                                  window=window, chunk=chunk,
-                                 unroll=cfg.unroll_inner)
+                                 unroll=cfg.unroll_inner, kv_valid=kv_valid)
             colmax = chunked_colmax(qg, k, lse, scale=scale, causal=causal,
                                     window=window, chunk=chunk,
-                                    unroll=cfg.unroll_inner)
+                                    unroll=cfg.unroll_inner,
+                                    kv_valid=kv_valid, q_valid=q_valid)
         kv, s_v = mca_project(jax.random.fold_in(mca_key, 1), src, p["wv"],
                               colmax, skv, cfg.mca, "v_proj")
         stats = _acc_stats(stats, s_v)
@@ -434,7 +484,7 @@ def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
         else:
             out = chunked_av(qg, k, v, lse, scale=scale, causal=causal,
                              window=window, chunk=chunk,
-                             unroll=cfg.unroll_inner)
+                             unroll=cfg.unroll_inner, kv_valid=kv_valid)
         rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))     # [B, Sq]
     else:
         v_cache = _split_heads(src @ p["wv"], hkv, dh)
@@ -446,8 +496,12 @@ def gqa_attention(p, cfg, x, *, pos, mca_key=None, causal=None,
         else:
             out, m, lse = onepass_attention(
                 qg, k, v, scale=scale, causal=causal, window=window,
-                chunk=chunk, unroll=cfg.unroll_inner)
+                chunk=chunk, unroll=cfg.unroll_inner, kv_valid=kv_valid)
         rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))
+    if q_valid is not None:
+        # padding query rows carry garbage lse; zero importance keeps them
+        # in the cheapest tier and out of capacity competition
+        rowmax = jnp.where(q_valid, rowmax, 0.0)
 
     out = out.reshape(b, sq, cfg.n_heads * dh)
     if cfg.mca.active("o_proj") and mca_key is not None:
@@ -481,7 +535,7 @@ def _decode_attn_chunked(qg, kc, vc, valid, scale, chunk):
     dominates decode temp memory at 32k+ contexts (measured 19.4 GB on
     qwen3 decode_32k with the monolithic softmax).
 
-    qg: [B,1,hkv,g,dh]; kc/vc: [B,slots,hkv,dh]; valid: [slots] bool.
+    qg: [B,1,hkv,g,dh]; kc/vc: [B,slots,hkv,dh]; valid: [B, slots] bool.
     Returns (out [B,1,hkv,g,dh], a_max [B,1] rowmax probability)."""
     b = qg.shape[0]
     hkv, g, dh = qg.shape[2], qg.shape[3], qg.shape[4]
@@ -492,10 +546,10 @@ def _decode_attn_chunked(qg, kc, vc, valid, scale, chunk):
         # dynamic slices of the (donated) cache — no moveaxis copy
         kcb = jax.lax.dynamic_slice_in_dim(kc, ci * chunk, chunk, axis=1)
         vcb = jax.lax.dynamic_slice_in_dim(vc, ci * chunk, chunk, axis=1)
-        vm = jax.lax.dynamic_slice_in_dim(valid, ci * chunk, chunk)
+        vm = jax.lax.dynamic_slice_in_dim(valid, ci * chunk, chunk, axis=1)
         s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kcb,
                        preferred_element_type=jnp.float32) * scale
-        s = jnp.where(vm[None, None, None, None, :], s, NEG_INF)
+        s = jnp.where(vm[:, None, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p_ = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -519,15 +573,19 @@ def _decode_attn_chunked(qg, kc, vc, valid, scale, chunk):
     return out, a_max
 
 
-def gqa_decode(p, cfg, x, cache, *, t):
+def gqa_decode(p, cfg, x, cache, *, t, pos_off=None):
     """Single-token decode. x: [B, 1, d]; t: scalar int32 position.
 
+    pos_off: optional [B] int32 left-padding offsets — slots whose global
+    position predates a batch row's first real token are masked for that
+    row, and RoPE positions shift to t - pos_off[b].
     Returns (y, new_cache, rowmax [B,1])."""
     b = x.shape[0]
     hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     dh = cfg.d_head
     scale = dh ** -0.5
     slots = cache["k"].shape[1]
+    off = jnp.zeros((b,), jnp.int32) if pos_off is None else pos_off
 
     q = _split_heads(x @ p["wq"], cfg.n_heads, dh)
     k1 = _split_heads(x @ p["wk"], hkv, dh)
@@ -535,7 +593,7 @@ def gqa_decode(p, cfg, x, cache, *, t):
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
         k1 = rmsnorm(k1, p["k_norm"], cfg.norm_eps)
-    posb = jnp.full((b, 1), t)
+    posb = jnp.full((b, 1), t) - off[:, None]
     q = apply_rope(q, posb, cfg.rope_theta, cfg.rotary_pct)
     k1 = apply_rope(k1, posb, cfg.rope_theta, cfg.rotary_pct)
 
@@ -545,14 +603,16 @@ def gqa_decode(p, cfg, x, cache, *, t):
     spos = cache["slot_pos"].at[slot].set(t)
 
     qg = q.reshape(b, 1, hkv, g, dh)
-    valid = spos >= 0
+    # slot_pos are global (pre-offset) positions, so the rolling-window
+    # wraparound composes with the per-row padding mask
+    valid = (spos >= 0)[None, :] & (spos[None, :] >= off[:, None])
     if slots >= 8192 and slots % 1024 == 0:
         # flash-decode path: never materialize the full score buffer
         out, rowmax = _decode_attn_chunked(qg, kc, vc, valid, scale, 1024)
     else:
         s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kc,
                        preferred_element_type=jnp.float32) * scale
-        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
         a = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhgqs,bshd->bqhgd", a.astype(vc.dtype), vc)
         rowmax = jnp.max(a, axis=(1, 2, 4))                 # [B, 1]
@@ -580,14 +640,18 @@ def init_mla(key, cfg):
     }
 
 
-def mla_attention(p, cfg, x, *, pos, mca_key=None, return_cache=False):
+def mla_attention(p, cfg, x, *, pos, mca_key=None, return_cache=False,
+                  kv_valid=None):
     """MLA (latent) attention, full-sequence. MCA applies to the latent
-    value up-projection W_UV (importance = colmax) and W_O."""
+    value up-projection W_UV (importance = colmax) and W_O.
+
+    kv_valid: optional [B, S] bool marking real (non-left-padding) tokens.
+    """
     b, s, d = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
     scale = (dn + dr) ** -0.5
-    stats = _zero_stats()
+    stats = _zero_stats(cfg.mca.n_tiers)
 
     cq = rmsnorm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
     q = _split_heads(cq @ p["w_uq"], h, dn + dr)
@@ -614,24 +678,29 @@ def mla_attention(p, cfg, x, *, pos, mca_key=None, return_cache=False):
     if mca_v:
         m, lse = chunked_lse(qg, k, scale=scale, causal=cfg.causal,
                              window=0, chunk=chunk,
-                             unroll=cfg.unroll_inner)
+                             unroll=cfg.unroll_inner, kv_valid=kv_valid)
         colmax = chunked_colmax(qg, k, lse, scale=scale, causal=cfg.causal,
                                 window=0, chunk=chunk,
-                                unroll=cfg.unroll_inner)
+                                unroll=cfg.unroll_inner, kv_valid=kv_valid,
+                                q_valid=kv_valid)
         hv, s_v = mca_project(jax.random.fold_in(mca_key, 1), ckv, p["w_uv"],
                               colmax, s, cfg.mca, "v_proj")
         stats = _acc_stats(stats, s_v)
         v = _split_heads(hv, h, dv)
         out = chunked_av(qg, k, v, lse, scale=scale, causal=cfg.causal,
-                         window=0, chunk=chunk, unroll=cfg.unroll_inner)
+                         window=0, chunk=chunk, unroll=cfg.unroll_inner,
+                         kv_valid=kv_valid)
         rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))
     else:
         v = _split_heads(ckv @ p["w_uv"], h, dv)
         out, m, lse = onepass_attention(qg, k, v, scale=scale,
                                         causal=cfg.causal, window=0,
                                         chunk=chunk,
-                                        unroll=cfg.unroll_inner)
+                                        unroll=cfg.unroll_inner,
+                                        kv_valid=kv_valid)
         rowmax = jnp.exp(jnp.max(m - lse, axis=(1, 2)))
+    if kv_valid is not None:
+        rowmax = jnp.where(kv_valid, rowmax, 0.0)
 
     out = out.reshape(b, s, h * dv)
     if cfg.mca.active("o_proj") and mca_key is not None:
@@ -652,7 +721,7 @@ def init_mla_cache(cfg, batch, max_len, dtype):
     }
 
 
-def mla_decode(p, cfg, x, cache, *, t):
+def mla_decode(p, cfg, x, cache, *, t, pos_off=None):
     """Absorbed-matrix MLA decode: scores/value read the latent cache
     directly; per-token cache cost is (kv_lora + rope) floats."""
     b = x.shape[0]
@@ -660,11 +729,12 @@ def mla_decode(p, cfg, x, cache, *, t):
     dn, dr, dv = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
     dl = cfg.mla_kv_lora
     scale = (dn + dr) ** -0.5
+    off = jnp.zeros((b,), jnp.int32) if pos_off is None else pos_off
 
     cq = rmsnorm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
     q = _split_heads(cq @ p["w_uq"], h, dn + dr)            # [B,1,h,dn+dr]
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    posb = jnp.full((b, 1), t)
+    posb = jnp.full((b, 1), t) - off[:, None]
     q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
 
     ckv1 = rmsnorm(x @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)  # [B,1,dl]
@@ -681,8 +751,9 @@ def mla_decode(p, cfg, x, cache, *, t):
     s_rot = jnp.einsum("bqhd,bsd->bhqs", q_rope, kr,
                        preferred_element_type=jnp.float32)
     s = (s_lat + s_rot) * scale
-    valid = jnp.arange(ckv.shape[1]) <= t
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    idxs = jnp.arange(ckv.shape[1])
+    valid = (idxs <= t)[None, :] & (idxs[None, :] >= off[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)
     out_lat = jnp.einsum("bhqs,bsl->bqhl", a.astype(ckv.dtype), ckv)
     # absorb W_UV on the way out

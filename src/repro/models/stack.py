@@ -19,13 +19,17 @@ from . import rglru, ssm
 from .common import apply_norm, init_norm, maybe_scan
 
 
-def _zero_carry_stats():
+def _zero_carry_stats(cfg):
+    """Stats carry for the layer scan; tier_hist has the static
+    cfg.mca.n_tiers length so the carry pytree is shape-stable."""
     return {"exact_flops": jnp.zeros((), jnp.float32),
-            "mca_flops": jnp.zeros((), jnp.float32)}
+            "mca_flops": jnp.zeros((), jnp.float32),
+            "tier_hist": jnp.zeros((cfg.mca.n_tiers,), jnp.float32)}
 
 
 def _add_stats(a, b):
-    return {k: a[k] + b[k] for k in a}
+    # MoE stats carry no tier_hist; missing keys contribute zero
+    return {k: a[k] + b.get(k, 0.0) for k in a}
 
 
 # ============================================================ layer kinds
@@ -64,7 +68,7 @@ def layer_forward(p, cfg, x, *, pos, mca_key, kind: str,
                   enc_out=None, causal=None, window=None):
     """One residual block. Returns (x, aux_loss, stats)."""
     aux = jnp.zeros((), jnp.float32)
-    stats = _zero_carry_stats()
+    stats = _zero_carry_stats(cfg)
 
     # Megatron-SP: residual stream sharded batch-over-DP and seq-over-model
     # at layer boundaries; GSPMD inserts the all-gather/reduce-scatter pair
@@ -129,7 +133,7 @@ def stack_forward(params, cfg, x, *, pos, mca_key, kind: str, enc_out=None,
         return (xx, aux + aux_l, _add_stats(stats, st)), None
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    carry0 = (x, jnp.zeros((), jnp.float32), _zero_carry_stats())
+    carry0 = (x, jnp.zeros((), jnp.float32), _zero_carry_stats(cfg))
     if cfg.unroll_layers:
         carry = carry0
         for i in range(n_layers):
@@ -182,7 +186,7 @@ def hybrid_forward(params, cfg, x, *, pos, mca_key):
         return (xx, aux, stats), None
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    carry0 = (x, jnp.zeros((), jnp.float32), _zero_carry_stats())
+    carry0 = (x, jnp.zeros((), jnp.float32), _zero_carry_stats(cfg))
     (x, aux, stats), _ = maybe_scan(
         body_fn, carry0, (params["groups"], jnp.arange(n_groups)),
         cfg.unroll_layers)

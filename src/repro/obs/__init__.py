@@ -1,0 +1,24 @@
+"""repro.obs — lightweight observability for the MCA pipeline.
+
+Three pieces, importable as ``from repro import obs``:
+
+- metrics: ``obs.get_registry()`` returns the active :class:`Registry`
+  (counters / gauges / histograms / timers); ``obs.scoped()`` isolates
+  collection for a test or a benchmark run.
+- tracing: ``obs.trace("name")`` / ``@obs.annotate("name")`` emit
+  ``jax.profiler`` spans on the hot paths (no-ops without a profiler).
+- sink: ``obs.JsonlSink(path)`` appends structured JSON-lines records.
+
+Metric naming convention: dotted ``<area>.<metric>`` —
+``kernels.flash_attention.kernel_calls``, ``train.flops_reduction``,
+``serve.wave_seconds``.  See ROADMAP.md § Observability for the full list.
+"""
+from .registry import (Counter, Gauge, Histogram, Registry, get_registry,
+                       scoped)
+from .sink import JsonlSink, read_jsonl
+from .trace import annotate, trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "get_registry", "scoped",
+    "JsonlSink", "read_jsonl", "annotate", "trace",
+]

@@ -1,0 +1,192 @@
+"""Process-global metrics registry: counters, gauges, histograms, timers.
+
+Design goals (in order): zero hot-path cost when unused, no dependencies,
+safe under threads (the trainer's watchdog and the async checkpointer both
+live on side threads), and trivially serializable snapshots for the JSONL
+sink and the benchmark JSON.
+
+Scoping: ``get_registry()`` returns the innermost registry opened with
+``scoped()`` on this thread, else the process-global one.  ``scoped()`` is
+how tests and benchmarks collect an isolated snapshot without resetting
+global state:
+
+    with obs.scoped() as reg:
+        run_training_step()
+        assert reg.counter("train.steps").value == 1
+
+Values recorded may be Python numbers or 0-d jax/numpy arrays; they are
+coerced to float at record time so snapshots never hold device buffers.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+
+def _as_float(v) -> float:
+    try:
+        return float(v)
+    except TypeError:           # pragma: no cover - exotic array wrappers
+        import numpy as np
+        return float(np.asarray(v))
+
+
+class Counter:
+    """Monotonically increasing count (events, tokens, fallbacks)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.value: float = 0.0
+
+    def inc(self, n=1) -> None:
+        n = _as_float(n)
+        with self._lock:
+            self.value += n
+
+
+class Gauge:
+    """Last-write-wins scalar (flops reduction, slot occupancy)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.value: Optional[float] = None
+
+    def set(self, v) -> None:
+        v = _as_float(v)
+        with self._lock:
+            self.value = v
+
+
+class Histogram:
+    """Streaming summary stats plus a bounded sample reservoir.
+
+    Keeps exact count/sum/min/max and the most recent ``max_samples``
+    observations for percentile estimates — enough for per-step latency
+    distributions without unbounded memory.
+    """
+
+    def __init__(self, max_samples: int = 1024) -> None:
+        self._lock = threading.Lock()
+        self._max = max_samples
+        self.count = 0
+        self.total = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+        self._samples: List[float] = []
+
+    def observe(self, v) -> None:
+        v = _as_float(v)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            self.min = v if self.min is None else min(self.min, v)
+            self.max = v if self.max is None else max(self.max, v)
+            if len(self._samples) >= self._max:
+                # drop the oldest half; recency beats uniformity for perf
+                self._samples = self._samples[self._max // 2:]
+            self._samples.append(v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else math.nan
+
+    def percentile(self, p: float) -> float:
+        """Approximate percentile over the retained samples; p in [0, 100]."""
+        with self._lock:
+            if not self._samples:
+                return math.nan
+            xs = sorted(self._samples)
+        i = min(len(xs) - 1, max(0, round(p / 100.0 * (len(xs) - 1))))
+        return xs[i]
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "sum": self.total, "mean": self.mean,
+                "min": self.min if self.min is not None else math.nan,
+                "max": self.max if self.max is not None else math.nan,
+                "p50": self.percentile(50), "p95": self.percentile(95)}
+
+
+class _Timer:
+    def __init__(self, hist: Histogram) -> None:
+        self._hist = hist
+
+    def __enter__(self) -> "_Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._hist.observe(time.perf_counter() - self._t0)
+
+
+class Registry:
+    """Name-keyed metric store; metrics auto-create on first access."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            return self._counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            return self._gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            return self._hists.setdefault(name, Histogram())
+
+    def timer(self, name: str) -> _Timer:
+        """Context manager recording elapsed seconds into histogram ``name``."""
+        return _Timer(self.histogram(name))
+
+    def snapshot(self) -> Dict[str, Dict]:
+        """Plain-dict view of every metric (JSON-serializable)."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = dict(self._hists)
+        return {
+            "counters": {k: c.value for k, c in sorted(counters.items())},
+            "gauges": {k: g.value for k, g in sorted(gauges.items())},
+            "histograms": {k: h.summary() for k, h in sorted(hists.items())},
+        }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+
+
+_GLOBAL = Registry()
+_scopes = threading.local()
+
+
+def _scope_stack() -> List[Registry]:
+    if not hasattr(_scopes, "stack"):
+        _scopes.stack = []
+    return _scopes.stack
+
+
+def get_registry() -> Registry:
+    """Innermost scoped registry on this thread, else the global one."""
+    stack = _scope_stack()
+    return stack[-1] if stack else _GLOBAL
+
+
+@contextlib.contextmanager
+def scoped(registry: Optional[Registry] = None) -> Iterator[Registry]:
+    """Route ``get_registry()`` to a fresh (or given) registry in this scope."""
+    reg = registry if registry is not None else Registry()
+    _scope_stack().append(reg)
+    try:
+        yield reg
+    finally:
+        _scope_stack().pop()

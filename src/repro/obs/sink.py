@@ -1,0 +1,54 @@
+"""Structured JSON-lines sink for metric records.
+
+One record per line, each a flat JSON object with a ``ts`` (unix seconds)
+and a ``kind`` tag; everything else is caller-defined.  Append-only and
+flushed per write so a crashed run still leaves a readable trail.
+
+    sink = JsonlSink("metrics.jsonl")
+    sink.write("train_step", step=3, loss=2.1, flops_reduction=8.7)
+    sink.write_snapshot(obs.get_registry())
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+from .registry import Registry, get_registry
+
+
+def _jsonable(v):
+    """Coerce jax/numpy scalars and arrays so json.dumps never chokes."""
+    if hasattr(v, "tolist"):
+        return v.tolist()
+    if hasattr(v, "item"):
+        return v.item()
+    return v
+
+
+class JsonlSink:
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self._lock = threading.Lock()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+
+    def write(self, kind: str, **fields) -> None:
+        rec = {"ts": time.time(), "kind": kind}
+        rec.update({k: _jsonable(v) for k, v in fields.items()})
+        line = json.dumps(rec)
+        with self._lock, open(self.path, "a") as f:
+            f.write(line + "\n")
+
+    def write_snapshot(self, registry: Optional[Registry] = None) -> None:
+        reg = registry if registry is not None else get_registry()
+        self.write("snapshot", **reg.snapshot())
+
+
+def read_jsonl(path: str):
+    """Load every record from a JSONL file (small files / tests only)."""
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]

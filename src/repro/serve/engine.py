@@ -3,16 +3,31 @@
 The engine wraps Model.prefill/Model.decode into jitted, cache-donating
 steps; ``ContinuousBatcher`` multiplexes requests onto fixed decode slots
 (vLLM-style slot reuse at toy scale — enough to drive the serving example
-and tests end-to-end)."""
+and tests end-to-end).
+
+Ragged prompts are LEFT-padded with ``pad_id`` and per-row ``pos_offset``
+amounts are threaded through prefill/decode: padding keys are masked out
+of attention and RoPE/positions count from the first real token, so a
+short prompt batched with a long one generates exactly what it would
+alone (MCA off; with MCA on, capacity routing couples rows of a batch by
+design).
+
+Serving metrics land in the ``repro.obs`` registry: ``serve.prefill_seconds``,
+``serve.decode_step_seconds``, ``serve.generated_tokens``,
+``serve.flops_reduction``, ``serve.tier_occupancy.t{i}``, and per-wave
+``serve.wave_seconds`` / ``serve.slot_utilization`` from the batcher.
+"""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.api import Model, _logits
 
 
@@ -26,19 +41,20 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, params, batch_size: int, max_len: int,
-                 mca_enabled: bool = False, seed: int = 0):
+                 mca_enabled: bool = False, seed: int = 0, pad_id: int = 0):
         self.model = model
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
+        self.pad_id = pad_id
         self.key = jax.random.PRNGKey(seed) if mca_enabled else None
 
         cfg = model.cfg
 
         def prefill(params, batch_in):
-            cache, hidden = model.prefill(params, batch_in, max_len,
-                                          self.key)
-            return cache, _logits(params, cfg, hidden[:, -1:])
+            cache, hidden, stats = model.prefill(params, batch_in, max_len,
+                                                 self.key)
+            return cache, _logits(params, cfg, hidden[:, -1:]), stats
 
         def decode(params, tok, cache, t):
             return model.decode(params, tok, cache, t)
@@ -46,22 +62,56 @@ class Engine:
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, donate_argnums=(2,))
 
+    def _record_mca(self, stats) -> None:
+        reg = obs.get_registry()
+        exact = float(stats["exact_flops"])
+        mca = float(stats["mca_flops"])
+        reg.counter("serve.mca_exact_flops").inc(exact)
+        reg.counter("serve.mca_flops").inc(mca)
+        # no MCA accounting (disabled / exact-only sites) -> neutral 1x
+        reg.gauge("serve.flops_reduction").set(
+            exact / mca if mca > 0 else 1.0)
+        hist = np.asarray(stats["tier_hist"])
+        for i, c in enumerate(hist):
+            reg.counter(f"serve.tier_occupancy.t{i}").inc(float(c))
+
     def generate(self, prompts: np.ndarray, max_new: int,
-                 greedy: bool = True) -> np.ndarray:
-        """prompts: [B, S]. Returns [B, max_new] generated ids."""
+                 greedy: bool = True,
+                 prompt_lens: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: [B, S] (left-padded if ragged). Returns [B, max_new]
+        generated ids.  prompt_lens: optional [B] real prompt lengths —
+        rows shorter than S get position offsets so left-padding is
+        invisible to the model."""
+        reg = obs.get_registry()
         b, s = prompts.shape
         assert b == self.batch
         batch_in = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        cache, logits = self._prefill(self.params, batch_in)
+        if prompt_lens is not None:
+            lens = np.asarray(prompt_lens, np.int32)
+            assert lens.shape == (b,)
+            if (lens < s).any():
+                batch_in["pos_offset"] = jnp.asarray(s - lens, jnp.int32)
+        with reg.timer("serve.prefill_seconds"), obs.trace("engine.prefill"):
+            cache, logits, stats = self._prefill(self.params, batch_in)
+            logits = jax.block_until_ready(logits)
+        self._record_mca(stats)
         outs = []
         tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size], axis=-1)
         outs.append(tok)
-        for i in range(max_new - 1):
-            t = jnp.asarray(s + i, jnp.int32)
-            logits, cache = self._decode(self.params, tok.astype(jnp.int32),
-                                         cache, t)
-            tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size], axis=-1)
-            outs.append(tok)
+        t0 = time.perf_counter()
+        with obs.trace("engine.decode_loop"):
+            for i in range(max_new - 1):
+                t = jnp.asarray(s + i, jnp.int32)
+                logits, cache = self._decode(self.params,
+                                             tok.astype(jnp.int32), cache, t)
+                tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size],
+                                 axis=-1)
+                outs.append(tok)
+            tok = jax.block_until_ready(tok)
+        if max_new > 1:
+            reg.histogram("serve.decode_step_seconds").observe(
+                (time.perf_counter() - t0) / (max_new - 1))
+        reg.counter("serve.generated_tokens").inc(b * max_new)
         return np.concatenate([np.asarray(t) for t in outs], axis=1)
 
 
@@ -79,19 +129,32 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def run(self) -> Dict[int, List[int]]:
+        reg = obs.get_registry()
         b = self.engine.batch
+        pad_id = self.engine.pad_id
         while self.queue:
             wave, self.queue = self.queue[:b], self.queue[b:]
+            n_real = len(wave)
             while len(wave) < b:                       # pad with a dummy
                 wave.append(Request(uid=-1, prompt=wave[0].prompt,
                                     max_new=wave[0].max_new))
             s = max(len(r.prompt) for r in wave)
+            # left-pad with the designated pad id; pos_offset (below) makes
+            # the padding invisible to attention and positions
             prompts = np.stack([
-                np.pad(r.prompt, (s - len(r.prompt), 0), mode="edge")
+                np.pad(r.prompt, (s - len(r.prompt), 0),
+                       constant_values=pad_id)
                 for r in wave])
+            lens = np.asarray([len(r.prompt) for r in wave], np.int32)
             max_new = max(r.max_new for r in wave)
-            gen = self.engine.generate(prompts, max_new)
+            t0 = time.perf_counter()
+            gen = self.engine.generate(prompts, max_new, prompt_lens=lens)
+            reg.histogram("serve.wave_seconds").observe(
+                time.perf_counter() - t0)
+            reg.gauge("serve.slot_utilization").set(n_real / b)
+            reg.counter("serve.waves").inc()
             for i, r in enumerate(wave):
                 if r.uid >= 0:
                     self.done[r.uid] = gen[i, :r.max_new].tolist()
+                    reg.counter("serve.requests_completed").inc()
         return self.done

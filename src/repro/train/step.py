@@ -76,7 +76,7 @@ def make_prefill_step(model: Model, max_len: int, with_mca: bool = True,
                       seed: int = 0):
     def prefill(params, batch):
         key = jax.random.PRNGKey(seed) if with_mca else None
-        cache, hidden = model.prefill(params, batch, max_len, key)
+        cache, hidden, _ = model.prefill(params, batch, max_len, key)
         from repro.models.api import _logits
         logits = _logits(params, model.cfg, hidden[:, -1:])
         return cache, logits

@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import checkpoint as ckpt
 from repro.optim import adamw
 
@@ -35,6 +36,7 @@ class TrainerConfig:
     log_every: int = 10
     watchdog_s: float = 300.0
     keep: int = 3
+    metrics_path: Optional[str] = None   # JSONL sink for per-step records
 
 
 class Watchdog:
@@ -75,6 +77,8 @@ class Trainer:
         self.watchdog = Watchdog(cfg.watchdog_s)
         self.checkpointer = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep)
                              if cfg.ckpt_dir else None)
+        self.sink = (obs.JsonlSink(cfg.metrics_path)
+                     if cfg.metrics_path else None)
         self.history: list = []
 
         self.params = (init_params if init_params is not None
@@ -91,6 +95,28 @@ class Trainer:
                 self.start_step = latest
                 log.info("restored checkpoint at step %d", latest)
 
+    def _record_step(self, step: int, loss: float, dt: float, metrics):
+        """Per-step MCA stats -> obs registry (+ optional JSONL record)."""
+        reg = obs.get_registry()
+        reg.counter("train.steps").inc()
+        reg.histogram("train.step_seconds").observe(dt)
+        record: Dict[str, Any] = {"step": step, "loss": loss, "dt": dt}
+        if "mca_exact_flops" in metrics:
+            exact = float(metrics["mca_exact_flops"])
+            mca = float(metrics["mca_flops"])
+            fr = exact / max(mca, 1.0)
+            reg.gauge("train.flops_reduction").set(fr)
+            record["flops_reduction"] = fr
+        hist = metrics.get("mca_tier_hist")
+        if hist is not None:
+            hist = np.asarray(hist, np.float64)
+            for i, c in enumerate(hist):
+                reg.counter(f"train.tier_occupancy.t{i}").inc(float(c))
+            record["tier_hist"] = hist.tolist()
+        if self.sink:
+            self.sink.write("train_step", **record)
+        return record
+
     def run(self) -> Dict[str, Any]:
         step = self.start_step
         t_start = time.time()
@@ -99,15 +125,19 @@ class Trainer:
             batch = jax.tree.map(jax.numpy.asarray, batch)
             self.watchdog.arm(step)
             t0 = time.time()
-            self.params, self.opt_state, metrics = self.train_step(
-                self.params, self.opt_state, batch)
-            loss = float(metrics["total_loss"])   # sync point
+            with obs.trace("trainer.step"):
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["total_loss"])   # sync point
             self.watchdog.disarm()
             dt = time.time() - t0
             step += 1
-            self.history.append({"step": step, "loss": loss, "dt": dt})
+            record = self._record_step(step, loss, dt, metrics)
+            self.history.append(record)
             if step % self.cfg.log_every == 0 or step == 1:
-                log.info("step %d loss %.4f (%.2fs/step)", step, loss, dt)
+                fr = record.get("flops_reduction")
+                log.info("step %d loss %.4f (%.2fs/step)%s", step, loss, dt,
+                         "" if fr is None else f" flops_reduction {fr:.2f}x")
             if self.checkpointer and step % self.cfg.ckpt_every == 0:
                 self.checkpointer.save(
                     step, {"params": self.params, "opt": self.opt_state})
@@ -116,6 +146,8 @@ class Trainer:
                 self.cfg.total_steps,
                 {"params": self.params, "opt": self.opt_state})
             self.checkpointer.wait()
+        if self.sink:
+            self.sink.write_snapshot()
         return {"steps": step - self.start_step,
                 "wall_s": time.time() - t_start,
                 "final_loss": self.history[-1]["loss"] if self.history

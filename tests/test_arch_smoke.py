@@ -94,7 +94,7 @@ class TestDecode:
             pytest.skip("encoder-only: no decode step (per assignment)")
         t_off = cfg.n_patch_tokens if cfg.family == "vlm" else 0
         max_len = S + 8 + t_off
-        cache, hidden = jax.jit(
+        cache, hidden, _ = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))(params, batch)
         assert np.all(np.isfinite(
             np.asarray(hidden[:, -1], np.float32))), f"{arch} prefill"
@@ -124,7 +124,7 @@ class TestDecode:
         max_len = S + 8 + t_off
         pre_batch = dict(batch)
         pre_batch["tokens"] = batch["tokens"][:, :S - 1]
-        cache, _ = jax.jit(
+        cache, _, _ = jax.jit(
             lambda p, b: model.prefill(p, b, max_len))(params, pre_batch)
         logits_d, _ = jax.jit(model.decode)(
             params, batch["tokens"][:, -1:], cache,

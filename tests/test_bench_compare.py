@@ -1,0 +1,157 @@
+"""Unit tests for the benchmarks.compare regression gate."""
+import copy
+import json
+
+import pytest
+
+from benchmarks import compare as C
+
+
+def _report():
+    return {
+        "schema_version": 1,
+        "profile": "smoke",
+        "kernels": [
+            {"name": "mca_sampled_matmul", "us_per_call": 400.0,
+             "flops_reduction": 4.0},
+            {"name": "chunked_attention", "us_per_call": 20_000.0},
+        ],
+        "tables": {
+            "table1": [
+                {"task": "syn-cola", "baseline_acc": 0.8, "rows": [
+                    {"alpha": 0.0, "acc": 0.80, "ci95": 0.0,
+                     "acc_delta": 0.0, "flops_reduction": 1.0,
+                     "tier_hist": [0.1, 0.2, 0.3, 0.4]},
+                    {"alpha": 0.2, "acc": 0.78, "ci95": 0.01,
+                     "acc_delta": -0.02, "flops_reduction": 1.5,
+                     "tier_hist": [0.0, 0.1, 0.4, 0.5]},
+                ]},
+            ],
+        },
+        "fig1": None,
+        "obs": {"counters": {}, "gauges": {}, "histograms": {}},
+    }
+
+
+def test_self_compare_is_clean():
+    r = _report()
+    assert C.compare(r, copy.deepcopy(r)) == []
+
+
+def test_kernel_timing_blowup_flagged():
+    cand = _report()
+    cand["kernels"][0]["us_per_call"] = 400.0 * 3.0     # > 2.5x
+    probs = C.compare(_report(), cand)
+    assert any("mca_sampled_matmul" in p for p in probs)
+
+
+def test_kernel_timing_within_ratio_ok():
+    cand = _report()
+    cand["kernels"][0]["us_per_call"] = 400.0 * 2.0     # < 2.5x
+    assert C.compare(_report(), cand) == []
+
+
+def test_missing_kernel_flagged():
+    cand = _report()
+    cand["kernels"].pop()
+    probs = C.compare(_report(), cand)
+    assert any("chunked_attention" in p and "missing" in p for p in probs)
+
+
+def test_accuracy_drift_flagged():
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["acc"] = 0.70    # |d|=0.08 > 0.05
+    probs = C.compare(_report(), cand)
+    assert any("acc" in p and "alpha=0.2" in p for p in probs)
+
+
+def test_flops_reduction_drift_flagged():
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["flops_reduction"] = 2.5
+    probs = C.compare(_report(), cand)
+    assert any("flops_reduction" in p for p in probs)
+
+
+def test_tier_hist_drift_flagged():
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["tier_hist"] = [0.5, 0.4, 0.1, 0.0]
+    probs = C.compare(_report(), cand)
+    assert any("tier_hist" in p for p in probs)
+
+
+def test_threshold_override_loosens_gate():
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["acc"] = 0.70
+    assert C.compare(_report(), cand, {"accuracy_abs": 0.2}) == []
+
+
+def test_profile_mismatch_raises():
+    cand = _report()
+    cand["profile"] = "full"
+    with pytest.raises(ValueError, match="profile"):
+        C.compare(_report(), cand)
+
+
+def test_schema_mismatch_raises():
+    cand = _report()
+    cand["schema_version"] = 2
+    with pytest.raises(ValueError, match="schema_version"):
+        C.compare(_report(), cand)
+
+
+# ------------------------------------------------------------------ CLI
+def _write(tmp_path, name, rep):
+    p = tmp_path / name
+    p.write_text(json.dumps(rep))
+    return str(p)
+
+
+def test_cli_clean_exits_zero(tmp_path, capsys):
+    b = _write(tmp_path, "b.json", _report())
+    c = _write(tmp_path, "c.json", _report())
+    assert C.main([b, c]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_regression_exits_one(tmp_path, capsys):
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["acc"] = 0.5
+    b = _write(tmp_path, "b.json", _report())
+    c = _write(tmp_path, "c.json", cand)
+    assert C.main([b, c]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_cli_report_only_exits_zero(tmp_path, capsys):
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["acc"] = 0.5
+    b = _write(tmp_path, "b.json", _report())
+    c = _write(tmp_path, "c.json", cand)
+    assert C.main([b, c, "--report-only"]) == 0
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_cli_threshold_flag(tmp_path):
+    cand = _report()
+    cand["tables"]["table1"][0]["rows"][1]["acc"] = 0.70
+    b = _write(tmp_path, "b.json", _report())
+    c = _write(tmp_path, "c.json", cand)
+    assert C.main([b, c, "--threshold", "accuracy_abs=0.2"]) == 0
+    assert C.main([b, c, "--threshold", "bogus=1"]) == 2
+
+
+def test_cli_bad_file_exits_two(tmp_path):
+    b = _write(tmp_path, "b.json", _report())
+    assert C.main([b, str(tmp_path / "missing.json")]) == 2
+
+
+def test_checked_in_baseline_self_compares_clean():
+    """The repo's BENCH_7.json must stay loadable and self-consistent."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_7.json")
+    with open(path) as f:
+        rep = json.load(f)
+    assert rep["schema_version"] == 1
+    assert C.compare(rep, copy.deepcopy(rep)) == []
+    assert {"table1", "table2", "table3"} <= set(rep["tables"])
+    assert rep["kernels"], "kernel timings missing"

@@ -1,0 +1,140 @@
+"""Regression tests for kernel dispatch (repro.kernels.ops).
+
+Covers three bugs:
+  * flash_attention / attn_colmax dropped the causal *diagonal offset* for
+    rectangular (sq < skv) shapes — decode-style suffix queries attended to
+    the wrong triangle;
+  * mca_matmul_ragged crashed (kernel-side assert) whenever the row-tile
+    count implied a tile size below block_m, instead of falling back;
+  * the wrappers passed the caller's block sizes through unclamped, so the
+    dispatch decision and the kernel's own clamping could disagree.
+
+Also checks that every dispatch records kernel/fallback counters in the
+repro.obs registry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import amm
+from repro.kernels import (attn_colmax, flash_attention, mca_matmul,
+                           mca_matmul_ragged)
+from repro.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qkv(b, hq, hkv, sq, skv, dh, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, hq, sq, dh))
+    k = jax.random.normal(kk, (b, hkv, skv, dh))
+    v = jax.random.normal(kv, (b, hkv, skv, dh))
+    return q, k, v
+
+
+# --------------------------------------------- causal offset (sq < skv)
+@pytest.mark.parametrize("sq,skv", [(64, 128), (64, 192), (128, 256)])
+def test_flash_attention_causal_rectangular(sq, skv):
+    """Suffix queries (kv history longer than the query span) must mask
+    against the shifted diagonal, matching the reference oracle."""
+    q, k, v = _qkv(1, 2, 2, sq, skv, 32)
+    scale = 1.0 / np.sqrt(32)
+    out, lse = flash_attention(q, k, v, scale=scale, causal=True,
+                               block_q=64, block_k=64)
+    ref_out, ref_lse = kref.ref_attention(q, k, v, scale=scale, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref_lse),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("sq,skv", [(64, 128), (128, 256)])
+def test_attn_colmax_causal_rectangular(sq, skv):
+    q, k, v = _qkv(1, 2, 2, sq, skv, 32, seed=1)
+    scale = 1.0 / np.sqrt(32)
+    _, lse = kref.ref_attention(q, k, v, scale=scale, causal=True)
+    cm = attn_colmax(q, k, lse, scale=scale, causal=True,
+                     block_q=64, block_k=64)
+    ref_cm = jnp.max(kref.ref_colmax(q, k, lse, scale=scale, causal=True),
+                     axis=1)
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(ref_cm),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- ragged tile fallback
+def test_mca_matmul_ragged_small_row_tiles():
+    """m=192 with 3 row tiles implies bm=64 < block_m=128: must not crash
+    and must match the eager reference."""
+    m, d, f, block, rmax = 192, 256, 128, 64, 3
+    kx, kw, kr, ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(kx, (m, d))
+    w = jax.random.normal(kw, (d, f))
+    m_tiles = 3
+    r_tile = jax.random.randint(kr, (m_tiles,), 1, rmax + 1)
+    probs = amm.block_probs(w, block)
+    idx = jax.random.categorical(ks, jnp.log(probs), shape=(m_tiles, rmax))
+    inv_rp = 1.0 / (r_tile[:, None] * probs[idx])
+    out = mca_matmul_ragged(x, w, r_tile, idx, inv_rp, block=block,
+                            block_m=128)
+    ref = kref.ref_mca_matmul_ragged(x, w, np.asarray(r_tile), idx, inv_rp,
+                                     block, m // m_tiles)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mca_matmul_ragged_fallback_traceable_under_jit():
+    """The fallback path must not concretize r_tile (jit-safe)."""
+    m, d, f, block = 96, 128, 64, 32
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.normal(kx, (m, d))
+    w = jax.random.normal(kw, (d, f))
+    m_tiles, rmax = 3, 2
+    r_tile = jnp.asarray([1, 2, 2], jnp.int32)
+    probs = amm.block_probs(w, block)
+    idx = jax.random.categorical(ks, jnp.log(probs), shape=(m_tiles, rmax))
+    inv_rp = 1.0 / (r_tile[:, None] * probs[idx])
+
+    fn = jax.jit(lambda x, w, r, i, p: mca_matmul_ragged(
+        x, w, r, i, p, block=block, block_m=128))
+    out = fn(x, w, r_tile, idx, inv_rp)
+    ref = kref.ref_mca_matmul_ragged(x, w, np.asarray(r_tile), idx, inv_rp,
+                                     block, m // m_tiles)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------- clamped block sizes
+def test_mca_matmul_clamps_blocks_to_shape():
+    """m,f smaller than the requested block sizes must still take the
+    kernel path (clamped), not silently mis-dispatch."""
+    m, d, f, block, r = 64, 256, 64, 64, 3
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(kx, (m, d))
+    w = jax.random.normal(kw, (d, f))
+    probs = amm.block_probs(w, block)
+    idx, inv_rp = amm.draw_block_samples(ks, probs, r)
+    with obs.scoped() as reg:
+        out = mca_matmul(x, w, idx, inv_rp, block=block,
+                         block_m=128, block_f=128)
+        assert reg.counter("kernels.mca_matmul.kernel_calls").value == 1
+        assert reg.counter("kernels.mca_matmul.fallback_calls").value == 0
+    ref = kref.ref_mca_matmul_fixed(x, w, idx, inv_rp, block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_dispatch_counters_recorded():
+    q, k, v = _qkv(1, 2, 2, 64, 64, 32, seed=6)
+    scale = 1.0 / np.sqrt(32)
+    with obs.scoped() as reg:
+        flash_attention(q, k, v, scale=scale, causal=True,
+                        block_q=64, block_k=64)
+        assert reg.counter(
+            "kernels.flash_attention.kernel_calls").value == 1
+        # skv=48 not divisible by the clamped bk: must fall back and say so
+        flash_attention(q, k[:, :, :48], v[:, :, :48], scale=scale,
+                        causal=False, block_q=64, block_k=32)
+        assert reg.counter(
+            "kernels.flash_attention.fallback_calls").value == 1

@@ -1,0 +1,167 @@
+"""Unit tests for the repro.obs metrics layer (registry, scoping, sink)."""
+import json
+import math
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+
+
+class TestRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = obs.Registry()
+        reg.counter("c").inc()
+        reg.counter("c").inc(2.5)
+        assert reg.counter("c").value == 3.5
+        reg.gauge("g").set(7)
+        assert reg.gauge("g").value == 7.0
+        h = reg.histogram("h")
+        for v in (1.0, 2.0, 3.0, 4.0):
+            h.observe(v)
+        assert h.count == 4
+        assert h.total == 10.0
+        assert h.min == 1.0 and h.max == 4.0
+        assert h.mean == 2.5
+
+    def test_jax_scalars_coerced(self):
+        reg = obs.Registry()
+        reg.counter("c").inc(jnp.asarray(2.0))
+        reg.gauge("g").set(np.float32(1.5))
+        snap = reg.snapshot()
+        assert snap["counters"]["c"] == 2.0
+        assert snap["gauges"]["g"] == 1.5
+        json.dumps(snap)                       # fully serializable
+
+    def test_timer_records_elapsed(self):
+        reg = obs.Registry()
+        with reg.timer("t"):
+            pass
+        h = reg.histogram("t")
+        assert h.count == 1
+        assert 0.0 <= h.total < 1.0
+
+    def test_histogram_percentiles(self):
+        h = obs.Histogram()
+        for v in range(100):
+            h.observe(float(v))
+        assert abs(h.percentile(50) - 50.0) <= 2.0
+        assert h.percentile(95) >= 90.0
+        s = h.summary()
+        assert s["count"] == 100 and not math.isnan(s["p50"])
+
+    def test_snapshot_empty_registry(self):
+        snap = obs.Registry().snapshot()
+        assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+class TestScoping:
+    def test_scoped_isolates_from_global(self):
+        g = obs.get_registry()
+        before = g.counter("scope.test").value
+        with obs.scoped() as reg:
+            assert obs.get_registry() is reg
+            obs.get_registry().counter("scope.test").inc()
+            assert reg.counter("scope.test").value == 1
+        assert g.counter("scope.test").value == before
+        assert obs.get_registry() is g
+
+    def test_scoped_nesting(self):
+        with obs.scoped() as outer:
+            with obs.scoped() as inner:
+                obs.get_registry().counter("n").inc()
+            assert inner.counter("n").value == 1
+            assert outer.counter("n").value == 0
+
+    def test_scopes_are_thread_local(self):
+        seen = {}
+
+        def worker():
+            seen["reg"] = obs.get_registry()
+
+        with obs.scoped() as reg:
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+        assert seen["reg"] is not reg      # other thread saw the global
+
+
+class TestSink:
+    def test_write_and_read(self, tmp_path):
+        sink = obs.JsonlSink(str(tmp_path / "m.jsonl"))
+        sink.write("train_step", step=1, loss=2.5,
+                   tier_hist=jnp.asarray([1.0, 2.0]))
+        recs = obs.read_jsonl(str(tmp_path / "m.jsonl"))
+        assert len(recs) == 1
+        assert recs[0]["kind"] == "train_step"
+        assert recs[0]["loss"] == 2.5
+        assert recs[0]["tier_hist"] == [1.0, 2.0]
+        assert "ts" in recs[0]
+
+    def test_write_snapshot(self, tmp_path):
+        sink = obs.JsonlSink(str(tmp_path / "m.jsonl"))
+        with obs.scoped() as reg:
+            reg.counter("x").inc(3)
+            sink.write_snapshot(reg)
+        recs = obs.read_jsonl(str(tmp_path / "m.jsonl"))
+        assert recs[0]["kind"] == "snapshot"
+        assert recs[0]["counters"]["x"] == 3.0
+
+
+class TestTrace:
+    def test_trace_and_annotate_are_noop_safe(self):
+        with obs.trace("unit.test"):
+            x = 1 + 1
+
+        @obs.annotate("unit.fn")
+        def fn(a):
+            return a * 2
+
+        assert x == 2 and fn(3) == 6
+
+
+class TestTrainerIntegration:
+    def test_trainer_surfaces_mca_stats(self, tmp_path):
+        """A short MCA-enabled training run must land per-step flops
+        reduction + tier occupancy in the obs registry and the JSONL sink."""
+        import jax
+        from repro.configs import get_config
+        from repro.core.policy import MCAConfig
+        from repro.data import SyntheticLM
+        from repro.models import build_model, reduced
+        from repro.optim import adamw
+        from repro.train.step import make_train_step
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        cfg = reduced(get_config("starcoder2-3b"), n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+                      vocab_size=128,
+                      mca=MCAConfig(enabled=True, alpha=0.4, block=16,
+                                    sites=("v_proj",)))
+        model = build_model(cfg)
+        data = SyntheticLM(cfg.vocab_size, 16, 2, seed=0)
+        step = jax.jit(make_train_step(model, adamw.AdamWConfig(lr=1e-3)))
+        metrics_path = str(tmp_path / "metrics.jsonl")
+        tcfg = TrainerConfig(total_steps=3, log_every=100,
+                             metrics_path=metrics_path)
+        with obs.scoped() as reg:
+            res = Trainer(model, adamw.AdamWConfig(lr=1e-3), data, step,
+                          tcfg).run()
+            snap = reg.snapshot()
+        assert res["steps"] == 3
+        assert snap["counters"]["train.steps"] == 3
+        assert snap["histograms"]["train.step_seconds"]["count"] == 3
+        assert snap["gauges"]["train.flops_reduction"] > 1.0
+        occ = [v for k, v in snap["counters"].items()
+               if k.startswith("train.tier_occupancy.t")]
+        assert occ and sum(occ) > 0
+        # per-step record + final snapshot in the sink
+        recs = obs.read_jsonl(metrics_path)
+        steps = [r for r in recs if r["kind"] == "train_step"]
+        assert len(steps) == 3
+        assert steps[-1]["flops_reduction"] > 1.0
+        assert len(steps[-1]["tier_hist"]) == cfg.mca.n_tiers
+        assert recs[-1]["kind"] == "snapshot"
+        # trainer history mirrors the records
+        assert res["history"][-1]["flops_reduction"] > 1.0
