@@ -1,1 +1,4 @@
-from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .checkpoint import (AsyncCheckpointer, CheckpointCorruptError,
+                         CheckpointError, StructureMismatchError,
+                         cleanup_stale_tmp, latest_step, restore,
+                         restore_latest_valid, save, valid_steps)

@@ -1,9 +1,17 @@
-"""Atomic, async, resharding checkpoints.
+"""Atomic, async, resharding, integrity-checked checkpoints.
 
 Layout:  <dir>/step_<N>/   arrays.npz + manifest.json   (tmp-dir + rename
 for atomicity).  Restore accepts a *different* mesh/shardings than the one
 that saved — elastic restart (N hosts -> M hosts) is just restore with the
 new shardings; leaves are device_put with the target NamedSharding.
+
+Integrity: the manifest records a CRC32 per stored array; ``restore``
+verifies them and raises :class:`CheckpointCorruptError` naming the first
+bad array.  ``restore_latest_valid`` walks steps newest-first, skipping
+corrupt / torn checkpoints (counted as ``resilience.ckpt.corrupt_skipped``)
+so a crashed-mid-write or bit-flipped step never bricks a restart.
+``cleanup_stale_tmp`` removes ``step_*.tmp`` leftovers from a crash
+between write and rename.
 """
 from __future__ import annotations
 
@@ -11,16 +19,31 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import ml_dtypes
 import numpy as np
 
+from repro import obs, resilience
+
 # numpy can't serialize bf16/f8 natively: store as a same-width uint view
 # and record the logical dtype in the manifest.
 _EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
            "float8_e5m2": np.uint8}
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint integrity / structure failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A stored array failed its checksum or is missing/unreadable."""
+
+
+class StructureMismatchError(CheckpointError):
+    """The checkpoint's tree structure does not match the restore target."""
 
 
 def _to_storable(arr: np.ndarray):
@@ -36,6 +59,10 @@ def _from_storable(arr: np.ndarray, logical: str):
     return arr
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     paths = [jax.tree_util.keystr(p) for p, _ in
@@ -49,17 +76,20 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    arrays, dtypes = {}, []
+    arrays, dtypes, checksums = {}, [], []
     for i, leaf in enumerate(leaves):
         arr, logical = _to_storable(np.asarray(leaf))
         arrays[f"a{i}"] = arr
         dtypes.append(logical)
+        checksums.append(_crc(arr))
+    resilience.inject("ckpt.write")
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
         "paths": paths,
         "dtypes": dtypes,
         "shapes": [list(a.shape) for a in arrays.values()],
+        "checksums": checksums,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -77,56 +107,169 @@ def _gc(ckpt_dir: str, keep: int) -> None:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    if not os.path.isdir(ckpt_dir):
+def _read_manifest(step_dir: str) -> Optional[dict]:
+    """Manifest dict, or None if missing/unreadable (torn checkpoint)."""
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+
+
+def cleanup_stale_tmp(ckpt_dir: str) -> int:
+    """Remove ``step_*.tmp`` leftovers from a crash mid-save. Returns the
+    number of directories removed (also counted as
+    ``resilience.ckpt.stale_tmp_removed``)."""
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    n = 0
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+            n += 1
+    if n:
+        obs.get_registry().counter(
+            "resilience.ckpt.stale_tmp_removed").inc(n)
+    return n
+
+
+def valid_steps(ckpt_dir: str) -> List[int]:
+    """Ascending step numbers whose directory has a readable manifest.
+    Dirs with a missing/unreadable manifest (crashed mid-rename, partial
+    copy) are skipped rather than trusted by name."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            step = int(d.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if _read_manifest(os.path.join(ckpt_dir, d)) is not None:
+            steps.append(step)
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir: str, step: int, like: Any, *, shardings: Any = None):
     """Restore into the structure of ``like`` (tree of arrays or
     ShapeDtypeStructs). ``shardings``: optional matching tree of
-    NamedShardings for the *current* mesh (elastic reshard-on-restore)."""
+    NamedShardings for the *current* mesh (elastic reshard-on-restore).
+
+    Raises :class:`CheckpointCorruptError` on checksum mismatch or
+    unreadable files, :class:`StructureMismatchError` if the stored tree
+    does not match ``like`` (naming the first mismatched path)."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
+    manifest = _read_manifest(d)
+    if manifest is None:
+        raise CheckpointCorruptError(
+            f"checkpoint {d}: manifest.json missing or unreadable")
+    try:
+        data = np.load(os.path.join(d, "arrays.npz"))
+    except Exception as e:      # zipfile.BadZipFile, OSError, ValueError...
+        raise CheckpointCorruptError(f"checkpoint {d}: arrays.npz "
+                                     f"unreadable: {e}") from e
     leaves, paths, treedef = _flatten(like)
-    assert paths == manifest["paths"], "checkpoint/model structure mismatch"
+    if paths != manifest["paths"]:
+        stored = manifest["paths"]
+        for i in range(max(len(paths), len(stored))):
+            want = paths[i] if i < len(paths) else "<missing>"
+            got = stored[i] if i < len(stored) else "<missing>"
+            if want != got:
+                raise StructureMismatchError(
+                    f"checkpoint {d}: structure mismatch at leaf {i}: "
+                    f"model has {want!r}, checkpoint has {got!r} "
+                    f"({len(paths)} vs {len(stored)} leaves)")
+    checksums = manifest.get("checksums")
     sh_leaves = (jax.tree_util.tree_leaves(shardings)
                  if shardings is not None else [None] * len(leaves))
     out = []
     for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
-        arr = _from_storable(data[f"a{i}"], manifest["dtypes"][i])
+        try:
+            raw = data[f"a{i}"]
+        except Exception as e:  # missing member, bad zip CRC, truncation
+            raise CheckpointCorruptError(
+                f"checkpoint {d}: array a{i} ({paths[i]}) unreadable: "
+                f"{e}") from e
+        if checksums is not None and _crc(raw) != checksums[i]:
+            raise CheckpointCorruptError(
+                f"checkpoint {d}: checksum mismatch on a{i} ({paths[i]})")
+        arr = _from_storable(raw, manifest["dtypes"][i])
         expect = tuple(leaf.shape)
-        assert arr.shape == expect, (paths[i], arr.shape, expect)
+        if arr.shape != expect:
+            raise StructureMismatchError(
+                f"checkpoint {d}: shape mismatch at {paths[i]}: "
+                f"stored {arr.shape}, model expects {expect}")
         arr = arr.astype(leaf.dtype)
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_latest_valid(ckpt_dir: str, like: Any, *, shardings: Any = None
+                         ) -> Tuple[Optional[int], Any]:
+    """Restore the newest checkpoint that passes integrity checks.
+
+    Walks steps newest-first; corrupt / torn steps are skipped (counted as
+    ``resilience.ckpt.corrupt_skipped``).  Returns ``(step, tree)`` or
+    ``(None, None)`` when nothing valid exists."""
+    for step in reversed(valid_steps(ckpt_dir)):
+        try:
+            return step, restore(ckpt_dir, step, like, shardings=shardings)
+        except CheckpointCorruptError as e:
+            obs.get_registry().counter(
+                "resilience.ckpt.corrupt_skipped").inc()
+            import logging
+            logging.getLogger("repro.checkpoint").warning(
+                "skipping corrupt checkpoint: %s", e)
+    return None, None
+
+
 class AsyncCheckpointer:
     """One-deep async write queue: snapshot to host, write on a thread.
-    ``wait()`` blocks until the in-flight write lands (call before exit)."""
+    ``wait()`` blocks until the in-flight write lands (call before exit).
+
+    A failed write no longer dies silently on the worker thread: the
+    exception is captured (counted as ``resilience.ckpt.write_failures``)
+    and re-raised from the next ``wait()`` or ``save()`` call, so the
+    training loop decides the recovery policy."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         os.makedirs(ckpt_dir, exist_ok=True)
+        cleanup_stale_tmp(ckpt_dir)
+
+    def _write(self, step: int, tree: Any, reg) -> None:
+        # route the worker thread's metrics (and injected faults) into the
+        # registry that was active on the thread that called save()
+        with obs.scoped(reg):
+            try:
+                save(self.dir, step, tree, keep=self.keep)
+            except BaseException as e:                     # noqa: BLE001
+                self._exc = e
+                reg.counter("resilience.ckpt.write_failures").inc()
 
     def save(self, step: int, tree: Any) -> None:
-        self.wait()
+        self.wait()                 # surfaces a prior failed write
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         self._thread = threading.Thread(
-            target=save, args=(self.dir, step, host_tree),
-            kwargs={"keep": self.keep}, daemon=True)
+            target=self._write,
+            args=(step, host_tree, obs.get_registry()), daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc

@@ -47,7 +47,14 @@ def block_probs(w: jax.Array, block: int = DEFAULT_BLOCK,
     Depends only on the weights, so callers cache it per layer ("one-time
     process" in the paper). Returns [K] probabilities summing to 1.
     """
+    from repro import resilience
     n2 = block_sq_norms(w, block)
+    n2 = resilience.inject("amm.probs", n2)
+    # numeric guard: a NaN/Inf block norm (overflowed weights, poisoned
+    # update) must not poison the whole distribution — treat it as empty
+    # and let the floor keep p strictly positive / normalizable even when
+    # every block is zero (uniform fallback).
+    n2 = jnp.where(jnp.isfinite(n2), n2, 0.0)
     n2 = jnp.maximum(n2, floor)
     return n2 / jnp.sum(n2)
 
@@ -59,8 +66,14 @@ def draw_block_samples(key: jax.Array, probs: jax.Array, r: int
     Returns (idx [r] int32, inv_rp [r] f32) where inv_rp[k] = 1/(r*p[idx[k]])
     is the estimator weight of sample k.
     """
+    # guards against degenerate p handed in by callers bypassing
+    # block_probs: non-finite mass becomes zero, log(0) -> -inf is fine
+    # for categorical, and the estimator weight divides by a floored p so
+    # a (theoretically impossible) drawn zero-probability block yields a
+    # large-but-finite weight instead of inf.
+    probs = jnp.where(jnp.isfinite(probs), probs, 0.0)
     idx = jax.random.categorical(key, jnp.log(probs), shape=(r,))
-    inv_rp = 1.0 / (r * probs[idx])
+    inv_rp = 1.0 / (r * jnp.maximum(probs[idx], 1e-12))
     return idx.astype(jnp.int32), inv_rp.astype(jnp.float32)
 
 

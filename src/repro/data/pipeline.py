@@ -13,6 +13,8 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
+from repro import resilience
+
 
 class SyntheticLM:
     """Deterministic synthetic next-token data with learnable structure.
@@ -37,6 +39,7 @@ class SyntheticLM:
                                   size=(vocab_size, 4), dtype=np.int32)
 
     def batch(self, step: int) -> Dict[str, np.ndarray]:
+        resilience.inject("data.batch")
         rng = np.random.default_rng(
             (self.seed * 1_000_003 + step) * 65_537 + self.host)
         b, s = self.local_batch, self.seq
@@ -83,6 +86,7 @@ class MemmapLM:
         self.host = host_id
 
     def batch(self, step: int) -> Dict[str, np.ndarray]:
+        resilience.inject("data.batch")
         rng = np.random.default_rng(
             (self.seed * 1_000_003 + step) * 65_537 + self.host)
         starts = rng.integers(0, len(self.data) - self.seq - 1,
@@ -100,30 +104,46 @@ class MemmapLM:
 
 class Prefetcher:
     """Background-thread prefetch with bounded queue (overlaps host data
-    work with device compute)."""
+    work with device compute).
+
+    A crash in the source used to kill the worker thread silently, leaving
+    ``next()`` blocked forever; now the exception is captured and re-raised
+    from ``next()`` on the consumer thread."""
 
     def __init__(self, source, start_step: int = 0, depth: int = 2):
         self.source = source
         self.q: "queue.Queue" = queue.Queue(maxsize=depth)
         self.step = start_step
         self._stop = threading.Event()
+        self._exc = None
         self.thread = threading.Thread(target=self._run, daemon=True)
         self.thread.start()
 
     def _run(self):
         step = self.step
         while not self._stop.is_set():
-            batch = self.source.batch(step)
+            try:
+                batch = self.source.batch(step)
+            except BaseException as e:                     # noqa: BLE001
+                self._exc = e
+                item = (None, None)       # wake a blocked consumer
+            else:
+                item = (step, batch)
             while not self._stop.is_set():
                 try:
-                    self.q.put((step, batch), timeout=0.1)
+                    self.q.put(item, timeout=0.1)
                     break
                 except queue.Full:
                     continue
+            if self._exc is not None:
+                return
             step += 1
 
     def next(self):
-        return self.q.get()
+        item = self.q.get()
+        if item[1] is None and self._exc is not None:
+            raise self._exc
+        return item
 
     def close(self):
         self._stop.set()

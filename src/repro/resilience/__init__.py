@@ -1,0 +1,26 @@
+"""repro.resilience — fault injection + graceful degradation.
+
+Two halves, importable as ``from repro import resilience``:
+
+- **injection** (:mod:`.injection`): named, seeded, deterministic fault
+  injection points on the hot paths.  ``resilience.inject("ckpt.write")``
+  is a no-op in production; ``with resilience.chaos(Fault(...)):``
+  activates raise / delay / corrupt faults for tests and chaos drills.
+- **guards** (:mod:`.guards`): host-side finite checks
+  (``is_finite`` / ``tree_finite`` / ``check_finite``) used by the serve
+  engine's degradation ladder and the trainer's skip-step logic.
+
+Recovery events are counted under the ``resilience.*`` prefix in the
+``repro.obs`` registry — ``resilience.injected.<point>``,
+``resilience.serve.*``, ``resilience.train.*``, ``resilience.ckpt.*`` —
+so every degradation is observable.  See ROADMAP.md § Robustness.
+"""
+from .guards import NonFiniteError, check_finite, is_finite, tree_finite
+from .injection import (CANONICAL_POINTS, Fault, FaultInjected, active,
+                        chaos, inject, points)
+
+__all__ = [
+    "CANONICAL_POINTS", "Fault", "FaultInjected", "active", "chaos",
+    "inject", "points",
+    "NonFiniteError", "check_finite", "is_finite", "tree_finite",
+]

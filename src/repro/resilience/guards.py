@@ -1,0 +1,36 @@
+"""Numeric guards: cheap host-side finite checks at recovery decision
+points (wave logits, per-step loss/grad-norm).  These run where the value
+has already been synced to host, so they add no device round-trips."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import numpy as np
+
+
+class NonFiniteError(FloatingPointError):
+    """A guarded value (logits, loss, grads) came back NaN/Inf."""
+
+
+def is_finite(value) -> bool:
+    """True iff a scalar / array is entirely finite (NaN/Inf-free)."""
+    if isinstance(value, (int, float)):
+        return math.isfinite(value)
+    arr = np.asarray(value)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return True
+    return bool(np.isfinite(arr).all())
+
+
+def tree_finite(tree: Any) -> bool:
+    """True iff every float leaf of a pytree is finite."""
+    import jax
+    return all(is_finite(leaf) for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def check_finite(value, what: str):
+    """Return ``value`` or raise :class:`NonFiniteError` naming ``what``."""
+    if not is_finite(value):
+        raise NonFiniteError(f"non-finite values in {what}")
+    return value

@@ -1,4 +1,4 @@
-"""Serving: prefill + decode engine with a simple continuous batcher.
+"""Serving: prefill + decode engine with a hardened continuous batcher.
 
 The engine wraps Model.prefill/Model.decode into jitted, cache-donating
 steps; ``ContinuousBatcher`` multiplexes requests onto fixed decode slots
@@ -12,14 +12,34 @@ short prompt batched with a long one generates exactly what it would
 alone (MCA off; with MCA on, capacity routing couples rows of a batch by
 design).
 
+Robustness (see ROADMAP.md § Robustness):
+
+* **Admission control** — ``submit`` validates prompt length against the
+  KV-cache capacity (``len(prompt) + max_new <= max_len``) and a bounded
+  queue; rejected requests get ``status="rejected"`` with a reason and a
+  ``serve.rejected.<reason>`` counter instead of crashing a wave later.
+* **Deadlines** — a request carrying ``deadline_s`` that has not finished
+  within that budget of submission is dropped with ``status="timeout"``.
+* **Degradation ladder** — a wave that raises or produces non-finite
+  logits is retried (with backoff) with MCA *disabled*: exact attention
+  reconstructs what the Monte-Carlo estimator corrupted (requests finish
+  ``degraded`` rather than ``failed``).  Only when the exact retry also
+  fails is the wave marked ``failed`` — the batcher never crashes.
+* Per-request terminal status: ``ok | degraded | timeout | rejected |
+  failed`` (on ``Request.status`` and ``ContinuousBatcher.status``).
+
 Serving metrics land in the ``repro.obs`` registry: ``serve.prefill_seconds``,
 ``serve.decode_step_seconds``, ``serve.generated_tokens``,
-``serve.flops_reduction``, ``serve.tier_occupancy.t{i}``, and per-wave
-``serve.wave_seconds`` / ``serve.slot_utilization`` from the batcher.
+``serve.flops_reduction``, ``serve.tier_occupancy.t{i}``, per-wave
+``serve.wave_seconds`` / ``serve.slot_utilization``, admission counters
+``serve.rejected.*`` and recovery counters ``resilience.serve.*``.
+Dummy padding slots in a partial wave are excluded from token and MCA
+FLOPs accounting.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional
 
@@ -27,8 +47,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import obs, resilience
 from repro.models.api import Model, _logits
+
+log = logging.getLogger("repro.serve")
+
+# terminal request statuses
+OK, DEGRADED, TIMEOUT, REJECTED, FAILED = (
+    "ok", "degraded", "timeout", "rejected", "failed")
 
 
 @dataclasses.dataclass
@@ -36,7 +62,11 @@ class Request:
     uid: int
     prompt: np.ndarray            # [S] int32
     max_new: int = 16
+    deadline_s: Optional[float] = None    # wall budget from submit()
     out: Optional[List[int]] = None
+    status: str = "queued"
+    reason: Optional[str] = None          # set when rejected/failed
+    submit_t: float = 0.0
 
 
 class Engine:
@@ -47,25 +77,34 @@ class Engine:
         self.batch = batch_size
         self.max_len = max_len
         self.pad_id = pad_id
+        self.mca_enabled = mca_enabled
         self.key = jax.random.PRNGKey(seed) if mca_enabled else None
 
         cfg = model.cfg
 
-        def prefill(params, batch_in):
-            cache, hidden, stats = model.prefill(params, batch_in, max_len,
-                                                 self.key)
-            return cache, _logits(params, cfg, hidden[:, -1:]), stats
+        def make_prefill(key):
+            def prefill(params, batch_in):
+                cache, hidden, stats = model.prefill(params, batch_in,
+                                                     max_len, key)
+                return cache, _logits(params, cfg, hidden[:, -1:]), stats
+            return jax.jit(prefill)
 
         def decode(params, tok, cache, t):
             return model.decode(params, tok, cache, t)
 
-        self._prefill = jax.jit(prefill)
+        self._prefill = make_prefill(self.key)
+        # exact-attention fallback path for the degradation ladder (same
+        # trace as an MCA-off engine, so fallback output is token-identical)
+        self._prefill_exact = (self._prefill if self.key is None
+                               else make_prefill(None))
         self._decode = jax.jit(decode, donate_argnums=(2,))
 
-    def _record_mca(self, stats) -> None:
+    def _record_mca(self, stats, frac: float) -> None:
+        """frac: fraction of batch rows that are real requests — dummy
+        padding slots must not inflate MCA FLOPs accounting."""
         reg = obs.get_registry()
-        exact = float(stats["exact_flops"])
-        mca = float(stats["mca_flops"])
+        exact = float(stats["exact_flops"]) * frac
+        mca = float(stats["mca_flops"]) * frac
         reg.counter("serve.mca_exact_flops").inc(exact)
         reg.counter("serve.mca_flops").inc(mca)
         # no MCA accounting (disabled / exact-only sites) -> neutral 1x
@@ -73,33 +112,51 @@ class Engine:
             exact / mca if mca > 0 else 1.0)
         hist = np.asarray(stats["tier_hist"])
         for i, c in enumerate(hist):
-            reg.counter(f"serve.tier_occupancy.t{i}").inc(float(c))
+            reg.counter(f"serve.tier_occupancy.t{i}").inc(float(c) * frac)
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  greedy: bool = True,
-                 prompt_lens: Optional[np.ndarray] = None) -> np.ndarray:
+                 prompt_lens: Optional[np.ndarray] = None,
+                 n_real: Optional[int] = None,
+                 mca: bool = True,
+                 check_finite: bool = True) -> np.ndarray:
         """prompts: [B, S] (left-padded if ragged). Returns [B, max_new]
         generated ids.  prompt_lens: optional [B] real prompt lengths —
         rows shorter than S get position offsets so left-padding is
-        invisible to the model."""
+        invisible to the model.  n_real: rows that are real requests (the
+        rest are dummy padding slots, excluded from token/FLOPs metrics).
+        mca=False forces the exact-attention prefill (degradation ladder).
+        Raises :class:`resilience.NonFiniteError` if check_finite is set
+        and logits come back NaN/Inf."""
         reg = obs.get_registry()
         b, s = prompts.shape
         assert b == self.batch
+        if s + max_new > self.max_len:
+            raise ValueError(
+                f"prompt length {s} + max_new {max_new} overruns the "
+                f"KV cache (max_len={self.max_len})")
+        n_real = b if n_real is None else n_real
         batch_in = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if prompt_lens is not None:
             lens = np.asarray(prompt_lens, np.int32)
             assert lens.shape == (b,)
             if (lens < s).any():
                 batch_in["pos_offset"] = jnp.asarray(s - lens, jnp.int32)
+        prefill = self._prefill if mca else self._prefill_exact
         with reg.timer("serve.prefill_seconds"), obs.trace("engine.prefill"):
-            cache, logits, stats = self._prefill(self.params, batch_in)
+            cache, logits, stats = prefill(self.params, batch_in)
             logits = jax.block_until_ready(logits)
-        self._record_mca(stats)
+        logits = resilience.inject("serve.prefill", logits)
+        if check_finite:
+            resilience.check_finite(logits, "prefill logits")
+        self._record_mca(stats, n_real / b)
         outs = []
-        tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size], axis=-1)
+        tok = jnp.argmax(jnp.asarray(logits)[..., :self.model.cfg.vocab_size],
+                         axis=-1)
         outs.append(tok)
         t0 = time.perf_counter()
         with obs.trace("engine.decode_loop"):
+            resilience.inject("serve.decode")
             for i in range(max_new - 1):
                 t = jnp.asarray(s + i, jnp.int32)
                 logits, cache = self._decode(self.params,
@@ -111,30 +168,113 @@ class Engine:
         if max_new > 1:
             reg.histogram("serve.decode_step_seconds").observe(
                 (time.perf_counter() - t0) / (max_new - 1))
-        reg.counter("serve.generated_tokens").inc(b * max_new)
+            if check_finite:
+                resilience.check_finite(np.asarray(logits),
+                                        "decode logits")
+        reg.counter("serve.generated_tokens").inc(n_real * max_new)
         return np.concatenate([np.asarray(t) for t in outs], axis=1)
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching: finished slots immediately take the
-    next queued request (prefill is re-run for the whole slot batch at toy
-    scale; production would use per-slot prefill insertion)."""
+    """Slot-based continuous batching with admission control, deadlines
+    and a graceful-degradation ladder (see module docstring).  Finished
+    slots immediately take the next queued request (prefill is re-run for
+    the whole slot batch at toy scale; production would use per-slot
+    prefill insertion)."""
 
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, max_queue: Optional[int] = None,
+                 max_retries: int = 1, backoff_s: float = 0.02):
         self.engine = engine
+        self.max_queue = max_queue
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
+        self.status: Dict[int, str] = {}
 
-    def submit(self, req: Request):
+    def _reject(self, req: Request, reason: str) -> str:
+        req.status = REJECTED
+        req.reason = reason
+        self.status[req.uid] = REJECTED
+        reg = obs.get_registry()
+        reg.counter(f"serve.rejected.{reason}").inc()
+        reg.counter("serve.rejected").inc()
+        return REJECTED
+
+    def submit(self, req: Request) -> str:
+        """Admission control: validate against cache capacity and queue
+        bound.  Returns the request's status ("queued" or "rejected")."""
+        eng = self.engine
+        if len(req.prompt) == 0:
+            return self._reject(req, "empty_prompt")
+        if len(req.prompt) + req.max_new > eng.max_len:
+            return self._reject(req, "prompt_too_long")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return self._reject(req, "queue_full")
+        req.submit_t = time.monotonic()
+        req.status = "queued"
         self.queue.append(req)
+        return req.status
+
+    def _finish(self, req: Request, status: str,
+                tokens: Optional[List[int]] = None) -> None:
+        req.status = status
+        self.status[req.uid] = status
+        if tokens is not None:
+            req.out = tokens
+            self.done[req.uid] = tokens
+            obs.get_registry().counter("serve.requests_completed").inc()
+
+    def _expired(self, req: Request, now: float) -> bool:
+        return (req.deadline_s is not None
+                and now - req.submit_t > req.deadline_s)
+
+    def _run_wave(self, prompts, max_new, lens, n_real):
+        """Degradation ladder: normal attempt, then retries with MCA
+        disabled (exact attention).  Returns (gen, degraded) or raises the
+        last error after max_retries exact retries."""
+        reg = obs.get_registry()
+        eng = self.engine
+        try:
+            return eng.generate(prompts, max_new, prompt_lens=lens,
+                                n_real=n_real), False
+        except Exception as e:                             # noqa: BLE001
+            last = e
+        for attempt in range(self.max_retries):
+            reg.counter("resilience.serve.wave_retries").inc()
+            log.warning("wave failed (%s); retry %d/%d with exact "
+                        "attention", last, attempt + 1, self.max_retries)
+            time.sleep(self.backoff_s * (2 ** attempt))
+            try:
+                gen = eng.generate(prompts, max_new, prompt_lens=lens,
+                                   n_real=n_real, mca=False)
+                if eng.mca_enabled:
+                    reg.counter("resilience.serve.degraded_waves").inc()
+                return gen, eng.mca_enabled
+            except Exception as e:                         # noqa: BLE001
+                last = e
+        raise last
 
     def run(self) -> Dict[int, List[int]]:
         reg = obs.get_registry()
         b = self.engine.batch
         pad_id = self.engine.pad_id
         while self.queue:
+            # deadline check at wave assembly: drop already-expired work
+            now = time.monotonic()
+            live = []
+            for r in self.queue:
+                if self._expired(r, now):
+                    self._finish(r, TIMEOUT)
+                    reg.counter("resilience.serve.timeouts").inc()
+                else:
+                    live.append(r)
+            self.queue = live
+            if not self.queue:
+                break
             wave, self.queue = self.queue[:b], self.queue[b:]
             n_real = len(wave)
+            real = list(wave)
             while len(wave) < b:                       # pad with a dummy
                 wave.append(Request(uid=-1, prompt=wave[0].prompt,
                                     max_new=wave[0].max_new))
@@ -148,13 +288,26 @@ class ContinuousBatcher:
             lens = np.asarray([len(r.prompt) for r in wave], np.int32)
             max_new = max(r.max_new for r in wave)
             t0 = time.perf_counter()
-            gen = self.engine.generate(prompts, max_new, prompt_lens=lens)
+            try:
+                gen, degraded = self._run_wave(prompts, max_new, lens,
+                                               n_real)
+            except Exception as e:                         # noqa: BLE001
+                log.error("wave failed after retries: %s", e)
+                for r in real:
+                    r.reason = str(e)
+                    self._finish(r, FAILED)
+                    reg.counter("resilience.serve.failed_requests").inc()
+                continue
             reg.histogram("serve.wave_seconds").observe(
                 time.perf_counter() - t0)
             reg.gauge("serve.slot_utilization").set(n_real / b)
             reg.counter("serve.waves").inc()
-            for i, r in enumerate(wave):
-                if r.uid >= 0:
-                    self.done[r.uid] = gen[i, :r.max_new].tolist()
-                    reg.counter("serve.requests_completed").inc()
+            now = time.monotonic()
+            for i, r in enumerate(real):
+                if self._expired(r, now):
+                    self._finish(r, TIMEOUT)
+                    reg.counter("resilience.serve.timeouts").inc()
+                else:
+                    self._finish(r, DEGRADED if degraded else OK,
+                                 gen[i, :r.max_new].tolist())
         return self.done

@@ -2,11 +2,21 @@
 deterministic data replay) designed for preemptible fleets.
 
 Fault-tolerance model (1000+ nodes posture):
-  * checkpoints are atomic + async; restart restores the latest step and
-    replays the data stream deterministically from there;
+  * checkpoints are atomic + async + checksummed; restart restores the
+    latest *valid* step (corrupt/torn checkpoints are skipped) and replays
+    the data stream deterministically from there;
+  * every step's loss / grad-norm is finite-checked: a NaN/Inf step is
+    *skipped* (params and optimizer state keep their pre-step values,
+    ``train.skipped_steps`` counts it) instead of training on garbage;
+    after ``max_bad_steps`` consecutive bad steps the trainer rolls back
+    to the last valid checkpoint (``resilience.train.rollbacks``);
   * a watchdog thread flags steps exceeding ``watchdog_s`` (straggler /
-    hung-collective detection — on a real fleet this triggers the
-    coordinator's restart path; here it logs and counts);
+    hung-collective detection) and escalates from log-only to an actual
+    recovery callback after ``watchdog_escalate_after`` firings;
+  * failed async checkpoint writes no longer die silently: the exception
+    surfaces on the next save/wait, is counted
+    (``resilience.train.ckpt_failures``) and training continues —
+    availability over durability, with the gap visible in metrics;
   * elastic restart: restore() accepts new-mesh shardings, so a job can
     come back on a different host count (see checkpoint/checkpoint.py).
 """
@@ -14,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import math
 import threading
 import time
 from typing import Any, Callable, Dict, Optional
@@ -21,7 +32,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import numpy as np
 
-from repro import obs
+from repro import obs, resilience
 from repro.checkpoint import checkpoint as ckpt
 from repro.optim import adamw
 
@@ -37,27 +48,52 @@ class TrainerConfig:
     watchdog_s: float = 300.0
     keep: int = 3
     metrics_path: Optional[str] = None   # JSONL sink for per-step records
+    finite_checks: bool = True           # skip NaN/Inf steps
+    max_bad_steps: int = 3               # consecutive bad steps -> rollback
+    watchdog_escalate_after: int = 2     # firings before recovery_cb runs
+    recovery_cb: Optional[Callable] = None   # called on watchdog escalation
 
 
 class Watchdog:
-    """Flags steps that exceed the deadline (straggler mitigation hook)."""
+    """Flags steps that exceed the deadline (straggler mitigation hook).
 
-    def __init__(self, deadline_s: float):
+    Escalation ladder: every firing logs + counts
+    (``resilience.train.watchdog_fired``); from ``escalate_after`` firings
+    on, ``on_escalate(step)`` runs too (``resilience.train.
+    watchdog_escalations``) — on a real fleet that is the coordinator's
+    preempt/restart path, in tests a recovery callback."""
+
+    def __init__(self, deadline_s: float, escalate_after: int = 2,
+                 on_escalate: Optional[Callable] = None):
         self.deadline = deadline_s
+        self.escalate_after = escalate_after
+        self.on_escalate = on_escalate
         self.fired = 0
+        self.escalations = 0
         self._timer: Optional[threading.Timer] = None
 
     def arm(self, step: int):
         self.disarm()
-        self._timer = threading.Timer(self.deadline, self._fire, args=(step,))
+        # capture the ambient registry: the timer fires on its own thread
+        reg = obs.get_registry()
+        self._timer = threading.Timer(self.deadline, self._fire,
+                                      args=(step, reg))
         self._timer.daemon = True
         self._timer.start()
 
-    def _fire(self, step: int):
+    def _fire(self, step: int, reg):
         self.fired += 1
+        reg.counter("resilience.train.watchdog_fired").inc()
         log.warning("watchdog: step %d exceeded %.0fs — straggler or hung "
                     "collective; coordinator should preempt/restart",
                     step, self.deadline)
+        if self.fired >= self.escalate_after and self.on_escalate:
+            self.escalations += 1
+            reg.counter("resilience.train.watchdog_escalations").inc()
+            try:
+                self.on_escalate(step)
+            except Exception:                              # noqa: BLE001
+                log.exception("watchdog recovery callback failed")
 
     def disarm(self):
         if self._timer is not None:
@@ -74,33 +110,37 @@ class Trainer:
         self.data = data
         self.train_step = train_step
         self.cfg = cfg
-        self.watchdog = Watchdog(cfg.watchdog_s)
+        self.watchdog = Watchdog(cfg.watchdog_s, cfg.watchdog_escalate_after,
+                                 cfg.recovery_cb)
         self.checkpointer = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep)
                              if cfg.ckpt_dir else None)
         self.sink = (obs.JsonlSink(cfg.metrics_path)
                      if cfg.metrics_path else None)
         self.history: list = []
+        self.ckpt_errors = 0
+        self._bad_streak = 0
 
         self.params = (init_params if init_params is not None
                        else model.init(jax.random.PRNGKey(0)))
         self.opt_state = adamw.init_state(self.params)
         self.start_step = 0
         if cfg.ckpt_dir:
-            latest = ckpt.latest_step(cfg.ckpt_dir)
-            if latest is not None:
-                state = {"params": self.params, "opt": self.opt_state}
-                state = ckpt.restore(cfg.ckpt_dir, latest, state)
+            like = {"params": self.params, "opt": self.opt_state}
+            step, state = ckpt.restore_latest_valid(cfg.ckpt_dir, like)
+            if step is not None:
                 self.params = state["params"]
                 self.opt_state = state["opt"]
-                self.start_step = latest
-                log.info("restored checkpoint at step %d", latest)
+                self.start_step = step
+                log.info("restored checkpoint at step %d", step)
 
-    def _record_step(self, step: int, loss: float, dt: float, metrics):
+    def _record_step(self, step: int, loss: float, dt: float, metrics,
+                     status: str = "ok"):
         """Per-step MCA stats -> obs registry (+ optional JSONL record)."""
         reg = obs.get_registry()
         reg.counter("train.steps").inc()
         reg.histogram("train.step_seconds").observe(dt)
-        record: Dict[str, Any] = {"step": step, "loss": loss, "dt": dt}
+        record: Dict[str, Any] = {"step": step, "loss": loss, "dt": dt,
+                                  "status": status}
         if "mca_exact_flops" in metrics:
             exact = float(metrics["mca_exact_flops"])
             mca = float(metrics["mca_flops"])
@@ -117,7 +157,55 @@ class Trainer:
             self.sink.write("train_step", **record)
         return record
 
+    # ----------------------------------------------------- fault handling
+    def _step_is_bad(self, loss: float, metrics) -> bool:
+        if not self.cfg.finite_checks:
+            return False
+        if not math.isfinite(loss):
+            return True
+        gnorm = metrics.get("grad_norm")
+        return gnorm is not None and not resilience.is_finite(
+            float(np.asarray(gnorm)))
+
+    def _rollback(self, step: int) -> int:
+        """Restore params/opt from the last valid checkpoint; returns the
+        step to resume from (``step`` unchanged if nothing to restore)."""
+        reg = obs.get_registry()
+        if not self.checkpointer:
+            log.error("no checkpoint dir: cannot roll back at step %d",
+                      step)
+            return step
+        like = {"params": self.params, "opt": self.opt_state}
+        ck_step, state = ckpt.restore_latest_valid(self.cfg.ckpt_dir, like)
+        if ck_step is None:
+            log.error("rollback requested at step %d but no valid "
+                      "checkpoint exists; continuing with current state",
+                      step)
+            return step
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        reg.counter("resilience.train.rollbacks").inc()
+        log.warning("rolled back from step %d to checkpoint step %d after "
+                    "%d consecutive bad steps", step, ck_step,
+                    self._bad_streak)
+        return ck_step
+
+    def _save(self, step: int) -> None:
+        """Async checkpoint; a failed previous write surfaces here and is
+        absorbed (counted + logged) so training keeps running."""
+        try:
+            self.checkpointer.save(
+                step, {"params": self.params, "opt": self.opt_state})
+        except Exception:                                  # noqa: BLE001
+            self.ckpt_errors += 1
+            obs.get_registry().counter(
+                "resilience.train.ckpt_failures").inc()
+            log.exception("checkpoint write failed at step %d (training "
+                          "continues; durability gap until next save)",
+                          step)
+
     def run(self) -> Dict[str, Any]:
+        reg = obs.get_registry()
         step = self.start_step
         t_start = time.time()
         while step < self.cfg.total_steps:
@@ -125,12 +213,36 @@ class Trainer:
             batch = jax.tree.map(jax.numpy.asarray, batch)
             self.watchdog.arm(step)
             t0 = time.time()
+            resilience.inject("train.step")
             with obs.trace("trainer.step"):
-                self.params, self.opt_state, metrics = self.train_step(
+                new_params, new_opt, metrics = self.train_step(
                     self.params, self.opt_state, batch)
                 loss = float(metrics["total_loss"])   # sync point
+            loss = resilience.inject("train.loss", loss)
+            if loss is None:
+                loss = float("nan")
             self.watchdog.disarm()
             dt = time.time() - t0
+            if self._step_is_bad(loss, metrics):
+                self._bad_streak += 1
+                reg.counter("train.skipped_steps").inc()
+                log.warning("step %d: non-finite loss/grads (loss=%s) — "
+                            "skipping update (%d consecutive)",
+                            step + 1, loss, self._bad_streak)
+                if self._bad_streak >= self.cfg.max_bad_steps:
+                    step = self._rollback(step + 1)
+                    self._bad_streak = 0
+                    continue
+                # skip: keep pre-step params/opt, advance past the batch
+                # (requires a non-donating train_step: donated pre-step
+                # buffers cannot be reused — use jit_train_step(donate=
+                # False) when finite_checks matter)
+                step += 1
+                self.history.append(self._record_step(
+                    step, loss, dt, metrics, status="skipped"))
+                continue
+            self._bad_streak = 0
+            self.params, self.opt_state = new_params, new_opt
             step += 1
             record = self._record_step(step, loss, dt, metrics)
             self.history.append(record)
@@ -139,13 +251,15 @@ class Trainer:
                 log.info("step %d loss %.4f (%.2fs/step)%s", step, loss, dt,
                          "" if fr is None else f" flops_reduction {fr:.2f}x")
             if self.checkpointer and step % self.cfg.ckpt_every == 0:
-                self.checkpointer.save(
-                    step, {"params": self.params, "opt": self.opt_state})
+                self._save(step)
         if self.checkpointer:
-            self.checkpointer.save(
-                self.cfg.total_steps,
-                {"params": self.params, "opt": self.opt_state})
-            self.checkpointer.wait()
+            self._save(self.cfg.total_steps)
+            try:
+                self.checkpointer.wait()
+            except Exception:                              # noqa: BLE001
+                self.ckpt_errors += 1
+                reg.counter("resilience.train.ckpt_failures").inc()
+                log.exception("final checkpoint write failed")
         if self.sink:
             self.sink.write_snapshot()
         return {"steps": step - self.start_step,
@@ -153,4 +267,5 @@ class Trainer:
                 "final_loss": self.history[-1]["loss"] if self.history
                 else float("nan"),
                 "watchdog_fired": self.watchdog.fired,
+                "ckpt_errors": self.ckpt_errors,
                 "history": self.history}

@@ -9,12 +9,20 @@
   the Monte-Carlo tests are deterministic run-to-run.
 - Installs a minimal ``hypothesis`` shim when the real package is missing
   (the CI image does not ship it; no new deps may be installed).
+- Per-test timeout guard (SIGALRM shim, no pytest-timeout dependency): a
+  hung collective / deadlocked queue fails its test in minutes instead of
+  stalling the whole job for hours.  Default 600s; override per test with
+  ``@pytest.mark.timeout(seconds)`` or the ``REPRO_TEST_TIMEOUT_S`` env
+  var.  Best-effort: a hang inside non-cooperative native code may not be
+  interruptible, and on platforms without SIGALRM the guard is a no-op.
 """
 import importlib.util
 import os
 import pathlib
 import random
+import signal
 import sys
+import threading
 
 # ---- hypothesis fallback (must run before test modules import it) ----
 try:
@@ -55,3 +63,32 @@ def _deterministic_seeds():
 def rng_key():
     """The suite's fixed base PRNG key; split, never reuse raw."""
     return jax.random.PRNGKey(SEED)
+
+
+# ---- per-test timeout guard (shim; see module docstring) ----
+DEFAULT_TEST_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "600"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    can_alarm = (hasattr(signal, "SIGALRM")
+                 and threading.current_thread() is threading.main_thread())
+    marker = item.get_closest_marker("timeout")
+    timeout = float(marker.args[0]) if (marker and marker.args) \
+        else DEFAULT_TEST_TIMEOUT_S
+    if not can_alarm or timeout <= 0:
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded the {timeout:.0f}s per-test guard "
+            "(hung collective / deadlock?)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, timeout)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)

@@ -111,7 +111,8 @@ def test_engine_records_obs_metrics(engine_setup):
         snap = reg.snapshot()
     assert snap["counters"]["serve.requests_completed"] == 3
     assert snap["counters"]["serve.waves"] == 2          # batch=2 -> 2 waves
-    assert snap["counters"]["serve.generated_tokens"] == 2 * 4 * 2
+    # 3 real requests x 4 tokens: the dummy slot padding wave 2 is excluded
+    assert snap["counters"]["serve.generated_tokens"] == 3 * 4
     assert snap["histograms"]["serve.prefill_seconds"]["count"] == 2
     assert snap["histograms"]["serve.wave_seconds"]["count"] == 2
     assert snap["gauges"]["serve.slot_utilization"] == 0.5   # last wave 1/2

@@ -124,7 +124,8 @@ class TestCheckpoint:
 
     def test_structure_mismatch_raises(self, tmp_path):
         ckpt.save(str(tmp_path), 1, self._tree())
-        with pytest.raises(AssertionError):
+        with pytest.raises(ckpt.StructureMismatchError,
+                           match="structure mismatch"):
             ckpt.restore(str(tmp_path), 1, {"x": jnp.zeros((2,))})
 
     def test_async_checkpointer(self, tmp_path):
