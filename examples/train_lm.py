@@ -55,8 +55,9 @@ def main():
     data = SyntheticLM(cfg.vocab_size, seq, batch, seed=0)
     opt_cfg = adamw.AdamWConfig(
         lr=3e-4, schedule=adamw.cosine_schedule(warmup=20, total=steps))
-    step = jax.jit(make_train_step(model, opt_cfg, n_micro=n_micro),
-                   donate_argnums=(0, 1))
+    # no donation: the Trainer's finite-check skip/rollback path reuses
+    # pre-step params/opt_state, which donation would free on device
+    step = jax.jit(make_train_step(model, opt_cfg, n_micro=n_micro))
     trainer = Trainer(model, opt_cfg, data, step,
                       TrainerConfig(total_steps=steps,
                                     ckpt_dir=args.ckpt_dir,

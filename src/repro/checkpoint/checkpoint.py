@@ -9,13 +9,16 @@ Integrity: the manifest records a CRC32 per stored array; ``restore``
 verifies them and raises :class:`CheckpointCorruptError` naming the first
 bad array.  ``restore_latest_valid`` walks steps newest-first, skipping
 corrupt / torn checkpoints (counted as ``resilience.ckpt.corrupt_skipped``)
-so a crashed-mid-write or bit-flipped step never bricks a restart.
-``cleanup_stale_tmp`` removes ``step_*.tmp`` leftovers from a crash
-between write and rename.
+and structure-mismatched ones — e.g. a stale checkpoint from an older
+model config sharing the dir (``resilience.ckpt.structure_skipped``) — so
+a crashed-mid-write, bit-flipped, or incompatible step never bricks a
+restart.  ``cleanup_stale_tmp`` removes ``step_*.tmp`` leftovers from a
+crash between write and rename.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
@@ -27,6 +30,8 @@ import ml_dtypes
 import numpy as np
 
 from repro import obs, resilience
+
+log = logging.getLogger("repro.checkpoint")
 
 # numpy can't serialize bf16/f8 natively: store as a same-width uint view
 # and record the logical dtype in the manifest.
@@ -216,18 +221,24 @@ def restore_latest_valid(ckpt_dir: str, like: Any, *, shardings: Any = None
                          ) -> Tuple[Optional[int], Any]:
     """Restore the newest checkpoint that passes integrity checks.
 
-    Walks steps newest-first; corrupt / torn steps are skipped (counted as
-    ``resilience.ckpt.corrupt_skipped``).  Returns ``(step, tree)`` or
-    ``(None, None)`` when nothing valid exists."""
+    Walks steps newest-first; corrupt / torn steps are skipped (counted
+    as ``resilience.ckpt.corrupt_skipped``), and so are steps whose tree
+    does not match ``like`` — a stale checkpoint from an older model
+    config left in the same dir must not kill a restart or rollback
+    (counted separately as ``resilience.ckpt.structure_skipped``).
+    Returns ``(step, tree)`` or ``(None, None)`` when nothing valid
+    exists."""
     for step in reversed(valid_steps(ckpt_dir)):
         try:
             return step, restore(ckpt_dir, step, like, shardings=shardings)
         except CheckpointCorruptError as e:
             obs.get_registry().counter(
                 "resilience.ckpt.corrupt_skipped").inc()
-            import logging
-            logging.getLogger("repro.checkpoint").warning(
-                "skipping corrupt checkpoint: %s", e)
+            log.warning("skipping corrupt checkpoint: %s", e)
+        except StructureMismatchError as e:
+            obs.get_registry().counter(
+                "resilience.ckpt.structure_skipped").inc()
+            log.warning("skipping structure-mismatched checkpoint: %s", e)
     return None, None
 
 

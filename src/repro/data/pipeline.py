@@ -108,7 +108,10 @@ class Prefetcher:
 
     A crash in the source used to kill the worker thread silently, leaving
     ``next()`` blocked forever; now the exception is captured and re-raised
-    from ``next()`` on the consumer thread."""
+    from ``next()`` on the consumer thread — on *every* call after the
+    crash (the worker is gone, so a blocking ``q.get()`` would never be
+    fed again; ``_exc`` stays set and is tested before touching the
+    queue)."""
 
     def __init__(self, source, start_step: int = 0, depth: int = 2):
         self.source = source
@@ -140,6 +143,10 @@ class Prefetcher:
             step += 1
 
     def next(self):
+        # fail fast forever once the source has crashed: the worker thread
+        # has exited, so blocking on the (empty) queue would hang
+        if self._exc is not None:
+            raise self._exc
         item = self.q.get()
         if item[1] is None and self._exc is not None:
             raise self._exc

@@ -66,6 +66,13 @@ def main():
         lr=args.lr, schedule=adamw.cosine_schedule(
             warmup=max(args.steps // 20, 1), total=args.steps))
 
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, log_every=10)
+    # the finite-check skip/rollback path reuses pre-step buffers, which
+    # donation would have freed on device — only donate when the guard is
+    # off (Trainer rejects the inconsistent combination at init)
+    donate = not tcfg.finite_checks
+
     n_dev = jax.device_count()
     if n_dev > 1:
         mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
@@ -73,19 +80,19 @@ def main():
             batch0 = jax.tree.map(jax.numpy.asarray, data.batch(0))
             step = jit_train_step(mesh, model, opt_cfg,
                                   jax.eval_shape(lambda: batch0),
-                                  n_micro=args.n_micro, seed=args.seed)
-            _run(model, opt_cfg, data, step, args)
+                                  n_micro=args.n_micro, seed=args.seed,
+                                  donate=donate)
+            _run(model, opt_cfg, data, step, tcfg, donate)
     else:
         step = jax.jit(make_train_step(model, opt_cfg, n_micro=args.n_micro,
                                        seed=args.seed),
-                       donate_argnums=(0, 1))
-        _run(model, opt_cfg, data, step, args)
+                       donate_argnums=(0, 1) if donate else ())
+        _run(model, opt_cfg, data, step, tcfg, donate)
 
 
-def _run(model, opt_cfg, data, step, args):
-    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                         ckpt_every=args.ckpt_every, log_every=10)
-    trainer = Trainer(model, opt_cfg, data, step, tcfg)
+def _run(model, opt_cfg, data, step, tcfg, donate):
+    trainer = Trainer(model, opt_cfg, data, step, tcfg,
+                      step_donates=donate)
     out = trainer.run()
     print(f"finished {out['steps']} steps in {out['wall_s']:.1f}s; "
           f"final loss {out['final_loss']:.4f}")

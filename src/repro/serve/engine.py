@@ -18,6 +18,10 @@ Robustness (see ROADMAP.md § Robustness):
   KV-cache capacity (``len(prompt) + max_new <= max_len``) and a bounded
   queue; rejected requests get ``status="rejected"`` with a reason and a
   ``serve.rejected.<reason>`` counter instead of crashing a wave later.
+  Waves are assembled capacity-aware: a wave runs at the max prompt
+  length / max ``max_new`` over its members, so requests that would
+  jointly overrun ``max_len`` are deferred to the next wave rather than
+  batched into a guaranteed failure.
 * **Deadlines** — a request carrying ``deadline_s`` that has not finished
   within that budget of submission is dropped with ``status="timeout"``.
 * **Degradation ladder** — a wave that raises or produces non-finite
@@ -238,6 +242,8 @@ class ContinuousBatcher:
         try:
             return eng.generate(prompts, max_new, prompt_lens=lens,
                                 n_real=n_real), False
+        except ValueError:
+            raise        # deterministic (capacity/shape): retrying can't help
         except Exception as e:                             # noqa: BLE001
             last = e
         for attempt in range(self.max_retries):
@@ -251,6 +257,8 @@ class ContinuousBatcher:
                 if eng.mca_enabled:
                     reg.counter("resilience.serve.degraded_waves").inc()
                 return gen, eng.mca_enabled
+            except ValueError:
+                raise
             except Exception as e:                         # noqa: BLE001
                 last = e
         raise last
@@ -272,7 +280,24 @@ class ContinuousBatcher:
             self.queue = live
             if not self.queue:
                 break
-            wave, self.queue = self.queue[:b], self.queue[b:]
+            # capacity-aware wave assembly: a wave runs at s = max prompt
+            # length and max_new = max over its members, so two
+            # individually-admissible requests can jointly overrun the
+            # cache — only add a request if the *joint* shape still fits;
+            # the rest keep their order and go in the next wave.  (The
+            # first pick always fits: submit validated it individually.)
+            wave, rest = [], []
+            s_max = new_max = 0
+            for r in self.queue:
+                cand_s = max(s_max, len(r.prompt))
+                cand_new = max(new_max, r.max_new)
+                if (len(wave) < b
+                        and cand_s + cand_new <= self.engine.max_len):
+                    wave.append(r)
+                    s_max, new_max = cand_s, cand_new
+                else:
+                    rest.append(r)
+            self.queue = rest
             n_real = len(wave)
             real = list(wave)
             while len(wave) < b:                       # pad with a dummy

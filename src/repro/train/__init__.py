@@ -1,3 +1,4 @@
 from .step import (jit_train_step, make_decode_step, make_prefill_step,
                    make_train_step, train_step_shardings)
-from .trainer import Trainer, TrainerConfig, Watchdog
+from .trainer import (Trainer, TrainerConfig,
+                      TrainingDivergedError, Watchdog)

@@ -9,7 +9,16 @@ Fault-tolerance model (1000+ nodes posture):
     *skipped* (params and optimizer state keep their pre-step values,
     ``train.skipped_steps`` counts it) instead of training on garbage;
     after ``max_bad_steps`` consecutive bad steps the trainer rolls back
-    to the last valid checkpoint (``resilience.train.rollbacks``);
+    to the last valid checkpoint (``resilience.train.rollbacks``).
+    Because data replay is deterministic, a rollback replays the same
+    batches with the same params — so rollbacks are bounded by
+    ``max_rollbacks``; past that the trainer aborts with
+    :class:`TrainingDivergedError` instead of livelocking.  The skip /
+    rollback path reuses pre-step buffers, so it requires a
+    *non-donating* train_step — ``Trainer(..., step_donates=True)`` with
+    ``finite_checks`` on is rejected at init (donated buffers are freed
+    on device and the first skipped step would crash with
+    "Array has been deleted");
   * a watchdog thread flags steps exceeding ``watchdog_s`` (straggler /
     hung-collective detection) and escalates from log-only to an actual
     recovery callback after ``watchdog_escalate_after`` firings;
@@ -39,6 +48,15 @@ from repro.optim import adamw
 log = logging.getLogger("repro.trainer")
 
 
+class TrainingDivergedError(RuntimeError):
+    """Raised when rollbacks keep hitting the same non-finite steps.
+
+    Deterministic data replay means a rollback re-runs the exact batches
+    with the exact params that just diverged; after ``max_rollbacks``
+    attempts the run cannot make progress and must be aborted (a human /
+    coordinator decides: lower the LR, change the data window, ...)."""
+
+
 @dataclasses.dataclass
 class TrainerConfig:
     total_steps: int = 100
@@ -50,6 +68,7 @@ class TrainerConfig:
     metrics_path: Optional[str] = None   # JSONL sink for per-step records
     finite_checks: bool = True           # skip NaN/Inf steps
     max_bad_steps: int = 3               # consecutive bad steps -> rollback
+    max_rollbacks: int = 2               # rollbacks before aborting the run
     watchdog_escalate_after: int = 2     # firings before recovery_cb runs
     recovery_cb: Optional[Callable] = None   # called on watchdog escalation
 
@@ -104,7 +123,17 @@ class Watchdog:
 class Trainer:
     def __init__(self, model, opt_cfg: adamw.AdamWConfig, data,
                  train_step: Callable, cfg: TrainerConfig,
-                 init_params: Optional[Any] = None):
+                 init_params: Optional[Any] = None,
+                 step_donates: bool = False):
+        if step_donates and cfg.finite_checks:
+            raise ValueError(
+                "finite_checks requires a non-donating train_step: the "
+                "skip/rollback path reuses pre-step params/opt_state, "
+                "which donation frees on device ('Array has been "
+                "deleted' on the first skipped step). Build the step "
+                "without donation (jit_train_step(donate=False) / no "
+                "donate_argnums) or set TrainerConfig.finite_checks="
+                "False.")
         self.model = model
         self.opt_cfg = opt_cfg
         self.data = data
@@ -118,6 +147,7 @@ class Trainer:
                      if cfg.metrics_path else None)
         self.history: list = []
         self.ckpt_errors = 0
+        self.rollbacks = 0
         self._bad_streak = 0
 
         self.params = (init_params if init_params is not None
@@ -184,10 +214,12 @@ class Trainer:
             return step
         self.params = state["params"]
         self.opt_state = state["opt"]
+        self.rollbacks += 1
         reg.counter("resilience.train.rollbacks").inc()
         log.warning("rolled back from step %d to checkpoint step %d after "
-                    "%d consecutive bad steps", step, ck_step,
-                    self._bad_streak)
+                    "%d consecutive bad steps (rollback %d/%d)", step,
+                    ck_step, self._bad_streak, self.rollbacks,
+                    self.cfg.max_rollbacks)
         return ck_step
 
     def _save(self, step: int) -> None:
@@ -230,13 +262,18 @@ class Trainer:
                             "skipping update (%d consecutive)",
                             step + 1, loss, self._bad_streak)
                 if self._bad_streak >= self.cfg.max_bad_steps:
+                    if self.rollbacks >= self.cfg.max_rollbacks:
+                        raise TrainingDivergedError(
+                            f"step {step + 1}: {self._bad_streak} "
+                            f"consecutive non-finite steps after "
+                            f"{self.rollbacks} rollbacks — deterministic "
+                            f"replay would reproduce the same divergence; "
+                            f"aborting instead of livelocking")
                     step = self._rollback(step + 1)
                     self._bad_streak = 0
                     continue
                 # skip: keep pre-step params/opt, advance past the batch
-                # (requires a non-donating train_step: donated pre-step
-                # buffers cannot be reused — use jit_train_step(donate=
-                # False) when finite_checks matter)
+                # (non-donating train_step — enforced at init)
                 step += 1
                 self.history.append(self._record_step(
                     step, loss, dt, metrics, status="skipped"))

@@ -24,7 +24,7 @@ from repro.models import build_model, reduced
 from repro.optim import adamw
 from repro.resilience import Fault, FaultInjected, NonFiniteError
 from repro.serve import ContinuousBatcher, Engine, Request
-from repro.train import Trainer, TrainerConfig
+from repro.train import Trainer, TrainerConfig, TrainingDivergedError
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -175,6 +175,21 @@ class TestCheckpointIntegrity:
         with pytest.raises(ckpt.StructureMismatchError, match=r"\['a'\]"):
             ckpt.restore(str(tmp_path), 1, {"x": jnp.zeros((2,))})
 
+    def test_restore_latest_valid_skips_structure_mismatch(self, tmp_path):
+        """Regression: a stale checkpoint from an older model config in
+        the same dir must be walked past, not crash the restore."""
+        tree = _tree()
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 2, {"x": jnp.zeros((2,))})  # old config
+        with obs.scoped() as reg:
+            step, out = ckpt.restore_latest_valid(str(tmp_path),
+                                                  jax.eval_shape(_tree))
+            snap = reg.snapshot()
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert snap["counters"]["resilience.ckpt.structure_skipped"] == 1
+
     def test_async_write_failure_reraised_from_wait(self, tmp_path):
         """Regression: a failed write used to die silently on the thread."""
         with obs.scoped() as reg:
@@ -251,6 +266,41 @@ class TestTrainerHardening:
         assert snap["counters"]["train.skipped_steps"] == 2
         # rollback restored step-2 state, then steps 3..5 applied cleanly
         assert float(tr.params["w"]) == 5.0
+
+    def test_rollback_bounded_aborts_on_persistent_divergence(self,
+                                                              tmp_path):
+        """Regression: deterministic replay means a rollback re-runs the
+        same bad batches — unbounded rollbacks livelock forever; past
+        max_rollbacks the trainer must abort instead."""
+        with obs.scoped() as reg:
+            tr = _toy_trainer(tmp_path, total_steps=4, max_bad_steps=2,
+                              max_rollbacks=1)
+            # a valid step-0 checkpoint to roll back to, written
+            # synchronously so the test never races the async checkpointer
+            ckpt.save(str(tmp_path / "ckpt"), 0,
+                      {"params": tr.params, "opt": tr.opt_state})
+            with resilience.chaos(Fault("train.loss", mode="corrupt",
+                                        times=None)):
+                with pytest.raises(TrainingDivergedError,
+                                   match="deterministic replay"):
+                    tr.run()
+            snap = reg.snapshot()
+        assert tr.rollbacks == 1
+        assert snap["counters"]["resilience.train.rollbacks"] == 1
+
+    def test_donating_step_rejected_with_finite_checks(self, tmp_path):
+        """Regression: finite_checks reuses pre-step buffers, which a
+        donating train_step frees on device — the inconsistent wiring
+        must fail loudly at init, not with 'Array has been deleted' on
+        the first skipped step (which CPU CI would never see)."""
+        data = SyntheticLM(32, 8, 2, seed=0)
+        with pytest.raises(ValueError, match="non-donating"):
+            Trainer(_ToyModel(), adamw.AdamWConfig(), data, _toy_step,
+                    TrainerConfig(total_steps=1), step_donates=True)
+        # with the guard off, donation is a legitimate perf choice
+        Trainer(_ToyModel(), adamw.AdamWConfig(), data, _toy_step,
+                TrainerConfig(total_steps=1, finite_checks=False),
+                step_donates=True)
 
     def test_watchdog_escalates_to_recovery_cb(self, tmp_path):
         calls = []
@@ -335,6 +385,10 @@ class TestTrainerHardening:
         pf = Prefetcher(Bad(), depth=1)
         with pytest.raises(OSError, match="disk gone"):
             pf.next()
+        # regression: the worker thread is gone — every later call must
+        # fail fast too, not block forever on the empty queue
+        with pytest.raises(OSError, match="disk gone"):
+            pf.next()
         pf.close()
 
 
@@ -392,6 +446,25 @@ class TestServeAdmission:
         prompts = np.ones((2, 30), np.int32)
         with pytest.raises(ValueError, match="overruns"):
             eng.generate(prompts, max_new=8)
+
+    def test_wave_assembly_is_capacity_aware(self, serve_setup):
+        """Regression: two individually-admissible requests whose joint
+        max(prompt)+max(max_new) overruns max_len used to be batched into
+        one wave, fail generate's capacity check deterministically, and
+        take the whole wave down as FAILED.  They must run in separate
+        waves instead."""
+        cfg, model, params, eng = serve_setup      # max_len=32, batch=2
+        b = ContinuousBatcher(eng)
+        b.submit(Request(uid=0, prompt=np.ones(20, np.int32), max_new=4))
+        b.submit(Request(uid=1, prompt=np.ones(4, np.int32), max_new=20))
+        with obs.scoped() as reg:
+            done = b.run()
+            snap = reg.snapshot()
+        assert b.status == {0: "ok", 1: "ok"}
+        assert len(done[0]) == 4 and len(done[1]) == 20
+        assert snap["counters"]["serve.waves"] == 2
+        # deterministic capacity errors must not burn retries
+        assert "resilience.serve.wave_retries" not in snap["counters"]
 
     def test_deadline_timeout(self, serve_setup):
         cfg, model, params, eng = serve_setup
