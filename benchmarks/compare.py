@@ -13,6 +13,10 @@ Per-metric thresholds (all overridable on the CLI):
 * ``accuracy_abs``       — absolute accuracy drift allowed per row.
 * ``tier_hist_l1``       — L1 distance allowed between normalized tier
                            occupancy histograms.
+* ``tokens_per_s_rel``   — serve_throughput tokens/s may drop at most
+                           this fraction below baseline per batcher row
+                           (prefill-FLOPs ratio and token parity are
+                           hard-gated, not thresholded).
 
 Exit status: 0 when clean (or ``--report-only``), 1 when any regression
 is found, 2 on malformed/incomparable inputs.  Comparing a report against
@@ -30,6 +34,7 @@ DEFAULT_THRESHOLDS: Dict[str, float] = {
     "flops_reduction_rel": 0.25,
     "accuracy_abs": 0.05,
     "tier_hist_l1": 0.35,
+    "tokens_per_s_rel": 0.10,
 }
 
 
@@ -113,6 +118,37 @@ def compare(base: dict, cand: dict,
                         problems.append(
                             f"{loc}: tier_hist L1 drift {l1:.3f} > "
                             f"{th['tier_hist_l1']}")
+
+    # ---- serving throughput: tokens/s floor + hard invariants
+    bst, cst = base.get("serve_throughput"), cand.get("serve_throughput")
+    if bst and cst is None:
+        problems.append("serve_throughput: missing in candidate")
+    elif bst and cst:
+        cmap = {r["batcher"]: r for r in cst.get("rows", [])}
+        for br in bst.get("rows", []):
+            cr = cmap.get(br["batcher"])
+            loc = f"serve_throughput/{br['batcher']}"
+            if cr is None:
+                problems.append(f"{loc}: row missing in candidate")
+                continue
+            floor = br["tokens_per_s"] * (1.0 - th["tokens_per_s_rel"])
+            if cr["tokens_per_s"] < floor:
+                problems.append(
+                    f"{loc}: tokens_per_s {cr['tokens_per_s']:.0f} vs "
+                    f"baseline {br['tokens_per_s']:.0f} (> "
+                    f"{th['tokens_per_s_rel']:.0%} regression)")
+            if not cr.get("parity_ok", False):
+                problems.append(f"{loc}: parity_ok is false — batched "
+                                "tokens diverge from solo generation")
+            # the tentpole's reason to exist: per-slot must keep beating
+            # the wave batcher on prefill FLOPs
+            if (br["batcher"] == "per_slot"
+                    and cr["prefill_flops_ratio"]
+                    < br["prefill_flops_ratio"] - 1e-6):
+                problems.append(
+                    f"{loc}: prefill_flops_ratio "
+                    f"{cr['prefill_flops_ratio']:.2f} fell below baseline "
+                    f"{br['prefill_flops_ratio']:.2f}")
     return problems
 
 

@@ -6,8 +6,13 @@ headline number) and writes a schema-stable JSON report consumable by
 
     {"schema_version": 1, "profile": "smoke|fast|full",
      "kernels": [...], "tables": {"table1": [...], ...},
+     "serve_throughput": {...},
      "fig1": {...}|null, "roofline_summary": {...}|null,
      "obs": <repro.obs registry snapshot>}
+
+``--params-cache DIR`` caches trained classifier params on disk keyed by
+a content hash of the training config, so repeat runs (CI) skip the
+training loops entirely.
 
 Profiles: ``full`` = paper-scale task counts/seeds; ``fast`` (default)
 completes on CPU in minutes; ``smoke`` is the CI budget (~1-2 min) —
@@ -39,6 +44,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="legacy alias for --profile full")
     ap.add_argument("--json-out", default="bench_results.json")
+    ap.add_argument("--params-cache", default=None, metavar="DIR",
+                    help="cache trained table params here (content-hash "
+                         "keyed); repeat runs skip training")
     args = ap.parse_args()
     profile = "full" if args.full else args.profile
     fast = profile != "full"
@@ -60,12 +68,22 @@ def main() -> None:
                           ("table2", table2_distilbert),
                           ("table3", table3_longformer)):
             t0 = time.time()
-            tab = mod.run(fast=fast, smoke=smoke)
+            tab = mod.run(fast=fast, smoke=smoke,
+                          cache_dir=args.params_cache)
             wall = time.time() - t0
             tables[name] = tab
             reg.histogram(f"bench.{name}.wall_seconds").observe(wall)
             _csv(f"{name}_mca", wall * 1e6 / max(len(tab), 1),
                  f"mean_flops_reduction={_mean_reduction(tab):.2f}x")
+
+        from . import serve_throughput as serve_mod
+        t0 = time.time()
+        serve_tp = serve_mod.run(fast=fast, smoke=smoke)
+        for row in serve_tp["rows"]:
+            _csv(f"serve_{row['batcher']}", (time.time() - t0) * 1e6 / 2,
+                 f"tokens_per_s={row['tokens_per_s']:.0f};"
+                 f"prefill_ratio={row['prefill_flops_ratio']:.2f}x;"
+                 f"parity={row['parity_ok']}")
 
         if not smoke:
             from . import fig1_tradeoff
@@ -97,6 +115,7 @@ def main() -> None:
         "profile": profile,
         "kernels": kb,
         "tables": tables,
+        "serve_throughput": serve_tp,
         "fig1": fig1,
         "roofline_summary": roofline_summary,
         "obs": reg.snapshot(),

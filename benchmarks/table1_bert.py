@@ -18,7 +18,8 @@ TASKS = (
 )
 
 
-def run(fast: bool = False, n_layers: int = 4, smoke: bool = False):
+def run(fast: bool = False, n_layers: int = 4, smoke: bool = False,
+        cache_dir=None):
     # smoke: CI-budget profile (~tens of seconds) — schema-identical to
     # fast/full, numbers are noisy/undertrained by design
     if smoke:
@@ -35,7 +36,8 @@ def run(fast: bool = False, n_layers: int = 4, smoke: bool = False):
     for task in tasks:
         cfg = G.bert_config(n_layers=n_layers, seq_len=task.seq_len,
                             vocab=task.vocab)
-        params = G.train_classifier(task, cfg, steps=steps, seed=task.seed)
+        params = G.train_classifier(task, cfg, steps=steps, seed=task.seed,
+                                    cache_dir=cache_dir)
         rows, base = G.mca_sweep(params, cfg, task, alphas,
                                  n_seeds=n_seeds, n_eval=n_eval)
         out.append({"task": task.name, "baseline_acc": base["acc"],

@@ -6,10 +6,10 @@ from __future__ import annotations
 from . import table1_bert
 
 
-def run(fast: bool = False, smoke: bool = False):
+def run(fast: bool = False, smoke: bool = False, cache_dir=None):
     # distil = half the layers of the table-1 encoder
     return table1_bert.run(fast=fast, n_layers=1 if smoke else 2,
-                           smoke=smoke)
+                           smoke=smoke, cache_dir=cache_dir)
 
 
 def format_table(results) -> str:

@@ -13,7 +13,8 @@ TASKS = (
 )
 
 
-def run(fast: bool = False, window: int = 64, smoke: bool = False):
+def run(fast: bool = False, window: int = 64, smoke: bool = False,
+        cache_dir=None):
     if smoke:
         tasks, steps, n_seeds, n_eval = TASKS[:1], 60, 2, 128
         alphas, n_layers = (0.2, 1.0), 2
@@ -27,7 +28,8 @@ def run(fast: bool = False, window: int = 64, smoke: bool = False):
     for task in tasks:
         cfg = G.bert_config(n_layers=n_layers, window=window,
                             seq_len=task.seq_len, vocab=task.vocab)
-        params = G.train_classifier(task, cfg, steps=steps, seed=task.seed)
+        params = G.train_classifier(task, cfg, steps=steps, seed=task.seed,
+                                    cache_dir=cache_dir)
         rows, base = G.mca_sweep(params, cfg, task, alphas,
                                  n_seeds=n_seeds, n_eval=n_eval)
         out.append({"task": task.name, "baseline_acc": base["acc"],

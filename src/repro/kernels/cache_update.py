@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: slot-sliced KV-cache update for per-slot decoding.
+
+Writes one new KV row per batch row at a *per-row* cache position::
+
+    cache[b, pos[b]] = new[b, 0]          for every b
+
+This is the decode-side primitive of per-slot continuous batching: every
+decode slot advances at its own sequence position, so the classic
+``dynamic_update_slice`` (one shared position for the whole batch) no
+longer applies.  A naive ``cache.at[arange(B), pos].set(...)`` lowers to a
+general scatter; this kernel instead folds the per-row position into the
+output BlockSpec ``index_map`` via scalar prefetch, so the DMA engine
+writes ONLY the B touched rows — the untouched cache slots are never read
+or copied (``input_output_aliases`` makes the donated cache buffer the
+output buffer).
+
+Grid is one program per batch row; the kernel body is a pure VMEM copy of
+the [1, F] new row.  The cache operand is declared ``memory_space=ANY``
+and never dereferenced — it exists only to donate its buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, new_ref, cache_ref, out_ref):
+    del pos_ref, cache_ref          # consumed by the index_map / aliasing
+    out_ref[...] = new_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_slot_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
+                   *, interpret: bool = False) -> jax.Array:
+    """cache: [B, S, F]; new: [B, 1, F]; pos: [B] int32 -> updated cache.
+
+    Rows with ``pos[b]`` outside [0, S) are clamped by the BlockSpec index
+    math on TPU; callers must pass in-range positions (the serve engine's
+    admission control guarantees it).
+    """
+    b, s, f = cache.shape
+    assert new.shape == (b, 1, f), (new.shape, cache.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # pos
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, 1, f), lambda i, pos: (i, 0, 0)),     # new
+            pl.BlockSpec(memory_space=pltpu.ANY),                  # cache
+        ],
+        out_specs=pl.BlockSpec((1, 1, f), lambda i, pos: (i, pos[i], 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={2: 0},                 # cache buffer -> out
+        interpret=interpret,
+    )
+    return fn(pos.astype(jnp.int32), new, cache)

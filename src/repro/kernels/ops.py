@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro import obs
 
 from . import attn_colmax as _colmax_mod
+from . import cache_update as _cache_mod
 from . import flash_attention as _flash_mod
 from . import mca_matmul as _mca_mod
 from . import ref as _ref
@@ -93,6 +94,31 @@ def mca_matmul_ragged(x, w, r_tile, idx, inv_rp, *, block=128,
         return _mca_mod.mca_matmul_ragged(
             x, w, r_tile, idx, inv_rp, block=block, block_m=bm,
             block_f=bf, interpret=_interpret())
+
+
+def kv_slot_update(cache: jax.Array, new: jax.Array, pos: jax.Array
+                   ) -> jax.Array:
+    """Per-row KV-cache write: ``cache[b, pos[b]] = new[b, 0]``.
+
+    cache: [B, S, ...]; new: [B, 1, ...] (same trailing dims); pos: [B]
+    int32.  The Pallas kernel folds ``pos`` into the output BlockSpec via
+    scalar prefetch (DMA writes only the B touched rows, in place through
+    ``input_output_aliases``); when the flattened feature size is not
+    lane-aligned the XLA scatter fallback runs instead.
+    """
+    b, s = cache.shape[0], cache.shape[1]
+    f = 1
+    for d in cache.shape[2:]:
+        f *= d
+    use_kernel = f % 128 == 0
+    _count("kv_slot_update", use_kernel)
+    if not use_kernel:
+        return cache.at[jnp.arange(b), pos].set(new[:, 0])
+    with obs.trace("kv_slot_update"):
+        out = _cache_mod.kv_slot_update(
+            cache.reshape(b, s, f), new.reshape(b, 1, f), pos,
+            interpret=_interpret())
+    return out.reshape(cache.shape)
 
 
 def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128):

@@ -1,7 +1,11 @@
 """Serving launcher: batched generation with the continuous batcher.
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
-        --reduced --requests 8 --max-new 16 [--mca --alpha 0.2]
+        --reduced --requests 8 --max-new 16 [--mca --alpha 0.2] \
+        [--per-slot [--check-every 8]]
+
+``--per-slot`` serves with the ``SlotBatcher`` (per-request prefill
+insertion + sync-free decode bursts) instead of the legacy wave batcher.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.policy import MCAConfig
 from repro.models import build_model, reduced
-from repro.serve import ContinuousBatcher, Engine, Request
+from repro.serve import ContinuousBatcher, Engine, Request, SlotBatcher
 
 
 def main():
@@ -28,6 +32,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--mca", action="store_true")
     ap.add_argument("--alpha", type=float, default=0.2)
+    ap.add_argument("--per-slot", action="store_true",
+                    help="use the per-slot SlotBatcher")
+    ap.add_argument("--check-every", type=int, default=8,
+                    help="decode burst length for --per-slot")
     args = ap.parse_args()
 
     mca = MCAConfig(enabled=args.mca, alpha=args.alpha, block=16,
@@ -39,7 +47,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = Engine(model, params, batch_size=args.batch,
                     max_len=args.max_len, mca_enabled=args.mca)
-    batcher = ContinuousBatcher(engine)
+    if args.per_slot:
+        batcher = SlotBatcher(engine, check_every=args.check_every)
+    else:
+        batcher = ContinuousBatcher(engine)
 
     rng = np.random.default_rng(0)
     t0 = time.time()

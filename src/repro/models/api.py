@@ -147,7 +147,7 @@ def _lm_loss(params, cfg, batch, mca_key=None):
 
 # ----------------------------------------------------------- cache utils
 def _pad_seq_cache(arr, slots: int):
-    """arr: [B, S, ...] -> ([B, slots, ...], slot_pos [slots])."""
+    """arr: [B, S, ...] -> ([B, slots, ...], slot_pos [B, slots])."""
     b, s = arr.shape[0], arr.shape[1]
     if slots >= s:                                   # global cache
         pad = [(0, 0)] * arr.ndim
@@ -162,7 +162,9 @@ def _pad_seq_cache(arr, slots: int):
         out = jnp.zeros((b, slots) + arr.shape[2:], arr.dtype
                         ).at[:, slot].set(tail)
         slot_pos = jnp.zeros((slots,), jnp.int32).at[slot].set(pos)
-    return out, slot_pos
+    # slot_pos is per-row so per-slot insertion can splice one request's
+    # position state without touching its batch neighbours
+    return out, jnp.broadcast_to(slot_pos[None], (b, slots))
 
 
 def _gqa_prefill_cache(cfg, k, v, max_len, window):
@@ -170,6 +172,31 @@ def _gqa_prefill_cache(cfg, k, v, max_len, window):
     kc, slot_pos = _pad_seq_cache(k, slots)
     vc, _ = _pad_seq_cache(v, slots)
     return {"k": kc, "v": vc, "slot_pos": slot_pos}
+
+
+def cache_insert_slot(cache, new, slot):
+    """Splice a batch-1 prefill cache into row ``slot`` of a live cache.
+
+    ``cache`` is a batched LM decode cache (`{"layers": ..., "pos_off":
+    [B]}` with every layer leaf scan-stacked `[L, 1-or-B, ...]`, batch on
+    axis 1); ``new`` is the same structure from a batch=1 prefill at the
+    same ``max_len``.  ``slot`` may be a traced int32 — the splice is a
+    ``dynamic_update_slice`` per leaf, so occupied rows keep decoding
+    undisturbed while the freed row admits the next request (per-slot
+    continuous batching).
+    """
+    layers = jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), slot, axis=1),
+        cache["layers"], new["layers"])
+    out = {"layers": layers}
+    if "pos_off" in cache:
+        off = new.get("pos_off")
+        if off is None:
+            off = jnp.zeros((1,), jnp.int32)
+        out["pos_off"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos_off"], off.astype(jnp.int32), slot, axis=0)
+    return out
 
 
 # -------------------------------------------------- LM prefill / decode

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core.policy import MCAConfig, mca_project
 from repro.dist.context import (DP, constrain, constrain_heads,
                                 get_mesh)
+from repro.kernels import ops as kernel_ops
 from .common import apply_rope, dense_init, maybe_scan, rmsnorm
 
 NEG_INF = -1e30
@@ -524,7 +525,7 @@ def init_gqa_cache(cfg, batch, max_len, dtype):
     return {
         "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.d_head), dtype),
         "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.d_head), dtype),
-        "slot_pos": jnp.full((slots,), -1, jnp.int32),
+        "slot_pos": jnp.full((batch, slots), -1, jnp.int32),
     }
 
 
@@ -574,7 +575,12 @@ def _decode_attn_chunked(qg, kc, vc, valid, scale, chunk):
 
 
 def gqa_decode(p, cfg, x, cache, *, t, pos_off=None):
-    """Single-token decode. x: [B, 1, d]; t: scalar int32 position.
+    """Single-token decode. x: [B, 1, d]; t: scalar or [B] int32 position.
+
+    A scalar ``t`` is the classic lockstep decode (one shared position); a
+    per-row ``t`` vector is the per-slot continuous-batching path, where
+    every batch row advances at its own sequence position and K/V land at
+    per-row cache slots (``kernels.kv_slot_update``).
 
     pos_off: optional [B] int32 left-padding offsets — slots whose global
     position predates a batch row's first real token are masked for that
@@ -586,6 +592,7 @@ def gqa_decode(p, cfg, x, cache, *, t, pos_off=None):
     scale = dh ** -0.5
     slots = cache["k"].shape[1]
     off = jnp.zeros((b,), jnp.int32) if pos_off is None else pos_off
+    t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
 
     q = _split_heads(x @ p["wq"], cfg.n_heads, dh)
     k1 = _split_heads(x @ p["wk"], hkv, dh)
@@ -593,19 +600,19 @@ def gqa_decode(p, cfg, x, cache, *, t, pos_off=None):
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
         k1 = rmsnorm(k1, p["k_norm"], cfg.norm_eps)
-    posb = jnp.full((b, 1), t) - off[:, None]
+    posb = t_vec[:, None] - off[:, None]
     q = apply_rope(q, posb, cfg.rope_theta, cfg.rotary_pct)
     k1 = apply_rope(k1, posb, cfg.rope_theta, cfg.rotary_pct)
 
-    slot = t % slots if cfg.window > 0 else t
-    kc = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
-    spos = cache["slot_pos"].at[slot].set(t)
+    slot = t_vec % slots if cfg.window > 0 else t_vec
+    kc = kernel_ops.kv_slot_update(cache["k"], k1, slot)
+    vc = kernel_ops.kv_slot_update(cache["v"], v1, slot)
+    spos = cache["slot_pos"].at[jnp.arange(b), slot].set(t_vec)
 
     qg = q.reshape(b, 1, hkv, g, dh)
-    # slot_pos are global (pre-offset) positions, so the rolling-window
-    # wraparound composes with the per-row padding mask
-    valid = (spos >= 0)[None, :] & (spos[None, :] >= off[:, None])
+    # slot_pos are per-row global (pre-offset) positions, so the rolling-
+    # window wraparound composes with the per-row padding mask
+    valid = (spos >= 0) & (spos >= off[:, None])
     if slots >= 8192 and slots % 1024 == 0:
         # flash-decode path: never materialize the full score buffer
         out, rowmax = _decode_attn_chunked(qg, kc, vc, valid, scale, 1024)
@@ -723,25 +730,29 @@ def init_mla_cache(cfg, batch, max_len, dtype):
 
 def mla_decode(p, cfg, x, cache, *, t, pos_off=None):
     """Absorbed-matrix MLA decode: scores/value read the latent cache
-    directly; per-token cache cost is (kv_lora + rope) floats."""
+    directly; per-token cache cost is (kv_lora + rope) floats.
+
+    ``t`` may be a scalar (lockstep decode) or a [B] vector (per-slot
+    continuous batching — each row writes/reads at its own position)."""
     b = x.shape[0]
     h = cfg.n_heads
     dn, dr, dv = cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim
     dl = cfg.mla_kv_lora
     scale = (dn + dr) ** -0.5
     off = jnp.zeros((b,), jnp.int32) if pos_off is None else pos_off
+    t_vec = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
 
     cq = rmsnorm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
     q = _split_heads(cq @ p["w_uq"], h, dn + dr)            # [B,1,h,dn+dr]
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    posb = jnp.full((b, 1), t) - off[:, None]
+    posb = t_vec[:, None] - off[:, None]
     q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
 
     ckv1 = rmsnorm(x @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)  # [B,1,dl]
     kr1 = apply_rope((x @ p["w_kr"])[:, :, None, :], posb,
                      cfg.rope_theta)[:, :, 0, :]              # [B,1,dr]
-    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv1, (0, t, 0))
-    kr = jax.lax.dynamic_update_slice(cache["kr"], kr1, (0, t, 0))
+    ckv = kernel_ops.kv_slot_update(cache["ckv"], ckv1, t_vec)
+    kr = kernel_ops.kv_slot_update(cache["kr"], kr1, t_vec)
 
     # absorb W_UK into the query:  q_lat[b,h,dl] = q_nope . W_UK[:, h, :]
     w_uk = p["w_uk"].reshape(dl, h, dn)
@@ -752,7 +763,8 @@ def mla_decode(p, cfg, x, cache, *, t, pos_off=None):
                        preferred_element_type=jnp.float32)
     s = (s_lat + s_rot) * scale
     idxs = jnp.arange(ckv.shape[1])
-    valid = (idxs <= t)[None, :] & (idxs[None, :] >= off[:, None])
+    valid = ((idxs[None, :] <= t_vec[:, None])
+             & (idxs[None, :] >= off[:, None]))
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     a = jax.nn.softmax(s, axis=-1)
     out_lat = jnp.einsum("bhqs,bsl->bqhl", a.astype(ckv.dtype), ckv)

@@ -48,6 +48,7 @@ class FaultInjected(RuntimeError):
 #: sites; ``inject`` auto-registers unknown names so the set never gates).
 CANONICAL_POINTS = (
     "serve.prefill",      # prefill logits (corrupt -> NaN logits)
+    "serve.insert",       # per-slot insertion logits (corrupt -> NaN)
     "serve.decode",       # decode loop entry (raise/delay)
     "train.step",         # before train_step (delay -> slow step)
     "train.loss",         # post-step loss value (corrupt -> NaN loss)

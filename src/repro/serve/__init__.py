@@ -1,1 +1,2 @@
-from .engine import ContinuousBatcher, Engine, Request
+from .engine import (ContinuousBatcher, Engine, Request, SlotBatcher,
+                     SlotState)

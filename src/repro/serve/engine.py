@@ -1,9 +1,25 @@
-"""Serving: prefill + decode engine with a hardened continuous batcher.
+"""Serving: prefill + decode engine with per-slot continuous batching.
 
 The engine wraps Model.prefill/Model.decode into jitted, cache-donating
-steps; ``ContinuousBatcher`` multiplexes requests onto fixed decode slots
-(vLLM-style slot reuse at toy scale — enough to drive the serving example
-and tests end-to-end).
+steps.  Two batchers multiplex requests onto fixed decode slots:
+
+* ``ContinuousBatcher`` — the legacy *wave* batcher: whenever a slot
+  frees, prefill is re-run for the whole wave (every in-flight request is
+  re-encoded).  Kept as the reference implementation and degradation
+  oracle.
+* ``SlotBatcher`` — real per-slot continuous batching (vLLM-style):
+  ``Engine.prefill_into`` encodes ONE request (batch=1, MCA on, with the
+  existing ragged masking/RoPE offsets) and splices its K/V pages and
+  position state into the shared decode cache at a fixed slot index
+  (``models.api.cache_insert_slot`` + the ``kernels.kv_slot_update``
+  slot-sliced cache write), so occupied slots keep decoding while a freed
+  slot admits the next queued request without touching anyone else's
+  state.  The decode loop is sync-free on the hot path: per-row position,
+  max-new countdown and finite flags live on device inside a
+  ``lax.scan`` burst of K steps (``check_every``; K=1 under active chaos
+  so fault-detection semantics match the per-step engine), and the host
+  syncs once per burst to harvest tokens, admit queued work and check
+  deadlines.
 
 Ragged prompts are LEFT-padded with ``pad_id`` and per-row ``pos_offset``
 amounts are threaded through prefill/decode: padding keys are masked out
@@ -34,9 +50,12 @@ Robustness (see ROADMAP.md § Robustness):
 
 Serving metrics land in the ``repro.obs`` registry: ``serve.prefill_seconds``,
 ``serve.decode_step_seconds``, ``serve.generated_tokens``,
+``serve.prefill_tokens``, ``serve.insertions``,
+``serve.prefill_tokens_saved``, ``serve.slot_idle_steps``,
 ``serve.flops_reduction``, ``serve.tier_occupancy.t{i}``, per-wave
-``serve.wave_seconds`` / ``serve.slot_utilization``, admission counters
-``serve.rejected.*`` and recovery counters ``resilience.serve.*``.
+``serve.wave_seconds`` / ``serve.slot_utilization`` (live-slot occupancy:
+the fraction of slot-steps spent decoding real requests), admission
+counters ``serve.rejected.*`` and recovery counters ``resilience.serve.*``.
 Dummy padding slots in a partial wave are excluded from token and MCA
 FLOPs accounting.
 """
@@ -45,14 +64,14 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs, resilience
-from repro.models.api import Model, _logits
+from repro.models.api import Model, _logits, cache_insert_slot
 
 log = logging.getLogger("repro.serve")
 
@@ -73,15 +92,33 @@ class Request:
     submit_t: float = 0.0
 
 
+@dataclasses.dataclass
+class SlotState:
+    """Device-resident per-slot decode state for ``SlotBatcher``.
+
+    All bookkeeping a decode step needs lives here so the hot loop never
+    syncs to host: ``tok`` is each slot's last accepted token, ``t`` its
+    next cache write position, ``steps_left`` its remaining decode-step
+    budget (0 = idle slot; idle rows emit ``pad_id`` and do not advance).
+    """
+
+    cache: Any
+    tok: jax.Array           # [B, 1] int32
+    t: jax.Array             # [B] int32
+    steps_left: jax.Array    # [B] int32
+
+
 class Engine:
     def __init__(self, model: Model, params, batch_size: int, max_len: int,
-                 mca_enabled: bool = False, seed: int = 0, pad_id: int = 0):
+                 mca_enabled: bool = False, seed: int = 0, pad_id: int = 0,
+                 decode_obs_every: int = 8):
         self.model = model
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.pad_id = pad_id
         self.mca_enabled = mca_enabled
+        self.decode_obs_every = max(1, decode_obs_every)
         self.key = jax.random.PRNGKey(seed) if mca_enabled else None
 
         cfg = model.cfg
@@ -96,12 +133,50 @@ class Engine:
         def decode(params, tok, cache, t):
             return model.decode(params, tok, cache, t)
 
+        def decode_step(params, tok, cache, t, bad):
+            # fused decode + argmax + finite-flag accumulation: the host
+            # never has to pull logits to pick the next token or check
+            # health, so the loop is dispatch-bound
+            logits, cache = model.decode(params, tok, cache, t)
+            nxt = jnp.argmax(logits[..., :cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            bad = bad | ~jnp.all(jnp.isfinite(logits))
+            return nxt, cache, t + jnp.int32(1), bad
+
+        def make_prefill_into(key):
+            def prefill_into(params, prompt, pos_offset, cache, tok, t,
+                             steps_left, slot, new_steps):
+                batch_in = {"tokens": prompt, "pos_offset": pos_offset}
+                new_cache, hidden, stats = model.prefill(params, batch_in,
+                                                         max_len, key)
+                logits = _logits(params, cfg, hidden[:, -1:])
+                cache = cache_insert_slot(cache, new_cache, slot)
+                tok0 = jnp.argmax(logits[..., :cfg.vocab_size],
+                                  axis=-1).astype(jnp.int32)
+                tok = jax.lax.dynamic_update_slice(tok, tok0, (slot, 0))
+                t = jax.lax.dynamic_update_slice(
+                    t, jnp.full((1,), prompt.shape[1], jnp.int32), (slot,))
+                steps_left = jax.lax.dynamic_update_slice(
+                    steps_left, new_steps[None], (slot,))
+                return cache, tok, t, steps_left, logits, stats
+            return jax.jit(prefill_into, donate_argnums=(3, 4, 5, 6))
+
+        def kill(steps_left, slot):
+            return jax.lax.dynamic_update_slice(
+                steps_left, jnp.zeros((1,), jnp.int32), (slot,))
+
         self._prefill = make_prefill(self.key)
         # exact-attention fallback path for the degradation ladder (same
         # trace as an MCA-off engine, so fallback output is token-identical)
         self._prefill_exact = (self._prefill if self.key is None
                                else make_prefill(None))
         self._decode = jax.jit(decode, donate_argnums=(2,))
+        self._decode_step = jax.jit(decode_step, donate_argnums=(2, 3, 4))
+        self._prefill_into = make_prefill_into(self.key)
+        self._prefill_into_exact = (self._prefill_into if self.key is None
+                                    else make_prefill_into(None))
+        self._kill = jax.jit(kill)
+        self._bursts: Dict = {}          # (k, eos_id) -> jitted scan burst
 
     def _record_mca(self, stats, frac: float) -> None:
         """frac: fraction of batch rows that are real requests — dummy
@@ -154,29 +229,158 @@ class Engine:
         if check_finite:
             resilience.check_finite(logits, "prefill logits")
         self._record_mca(stats, n_real / b)
-        outs = []
+        reg.counter("serve.prefill_tokens").inc(b * s)
+        # int32 cast hoisted out of the loop; position and finite flags stay
+        # on device — the only host syncs are the K-step latency observes
         tok = jnp.argmax(jnp.asarray(logits)[..., :self.model.cfg.vocab_size],
-                         axis=-1)
-        outs.append(tok)
-        t0 = time.perf_counter()
+                         axis=-1).astype(jnp.int32)
+        outs = [tok]
+        t_dev = jnp.asarray(s, jnp.int32)
+        bad = jnp.zeros((), bool)
+        hist = reg.histogram("serve.decode_step_seconds")
+        obs_every = self.decode_obs_every
+        since = 0
+        t_last = time.perf_counter()
         with obs.trace("engine.decode_loop"):
             resilience.inject("serve.decode")
-            for i in range(max_new - 1):
-                t = jnp.asarray(s + i, jnp.int32)
-                logits, cache = self._decode(self.params,
-                                             tok.astype(jnp.int32), cache, t)
-                tok = jnp.argmax(logits[..., :self.model.cfg.vocab_size],
-                                 axis=-1)
+            for _ in range(max_new - 1):
+                tok, cache, t_dev, bad = self._decode_step(
+                    self.params, tok, cache, t_dev, bad)
                 outs.append(tok)
+                since += 1
+                if since == obs_every:
+                    jax.block_until_ready(tok)
+                    now = time.perf_counter()
+                    hist.observe((now - t_last) / since)
+                    t_last, since = now, 0
             tok = jax.block_until_ready(tok)
-        if max_new > 1:
-            reg.histogram("serve.decode_step_seconds").observe(
-                (time.perf_counter() - t0) / (max_new - 1))
-            if check_finite:
-                resilience.check_finite(np.asarray(logits),
-                                        "decode logits")
+        if since:
+            hist.observe((time.perf_counter() - t_last) / since)
+        if max_new > 1 and check_finite and bool(bad):
+            raise resilience.NonFiniteError(
+                "non-finite values in decode logits")
         reg.counter("serve.generated_tokens").inc(n_real * max_new)
         return np.concatenate([np.asarray(t) for t in outs], axis=1)
+
+    # ------------------------------------------- per-slot insertion path
+    def init_slot_state(self) -> SlotState:
+        """Fresh all-idle slot state for a ``SlotBatcher`` session."""
+        return SlotState(
+            cache=self.model.init_cache(self.batch, self.max_len),
+            tok=jnp.zeros((self.batch, 1), jnp.int32),
+            t=jnp.zeros((self.batch,), jnp.int32),
+            steps_left=jnp.zeros((self.batch,), jnp.int32))
+
+    def prefill_bucket(self, prompt_len: int, max_new: int) -> int:
+        """Pow-2 padded prompt length, so insertion compiles once per
+        bucket instead of once per prompt length (clamped so the slot's
+        decode positions still fit the cache)."""
+        s_pad = 8
+        while s_pad < prompt_len:
+            s_pad *= 2
+        return max(prompt_len, min(s_pad, self.max_len - max_new))
+
+    def prefill_into(self, prompt: np.ndarray, state: SlotState, slot: int,
+                     max_new: int, mca: bool = True):
+        """Encode ONE request (batch=1, left-padded to a pow-2 bucket,
+        MCA on unless ``mca=False``) and donate/write its K/V pages and
+        position state into the shared decode cache at ``slot``.
+
+        Returns ``(state, first_token, s_pad)``.  Raises
+        :class:`resilience.NonFiniteError` when the insertion logits come
+        back non-finite (the ``serve.insert`` injection point taps the
+        logits first) — the slot's state is still consistently
+        overwritten, so an exact-attention retry into the same slot is
+        safe.  Other slots' device state is untouched either way.
+        """
+        reg = obs.get_registry()
+        n = len(prompt)
+        if n + max_new > self.max_len:
+            raise ValueError(
+                f"prompt length {n} + max_new {max_new} overruns the "
+                f"KV cache (max_len={self.max_len})")
+        s_pad = self.prefill_bucket(n, max_new)
+        padded = np.full((1, s_pad), self.pad_id, np.int32)
+        padded[0, s_pad - n:] = prompt
+        fn = self._prefill_into if mca else self._prefill_into_exact
+        with reg.timer("serve.prefill_seconds"), obs.trace("engine.insert"):
+            cache, tok, t, steps_left, logits, stats = fn(
+                self.params, jnp.asarray(padded),
+                jnp.asarray([s_pad - n], jnp.int32), state.cache,
+                state.tok, state.t, state.steps_left,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(max_new - 1, jnp.int32))
+            logits = jax.block_until_ready(logits)
+        state = SlotState(cache, tok, t, steps_left)
+        reg.counter("serve.insertions").inc()
+        reg.counter("serve.prefill_tokens").inc(s_pad)
+        self._record_mca(stats, 1.0)
+        try:
+            logits_np = resilience.inject("serve.insert", np.asarray(logits))
+            resilience.check_finite(logits_np, "insert logits")
+        except Exception as e:
+            # the old state was donated into the jit call — hand callers
+            # the (consistent) new state so they can retry into the slot
+            e.slot_state = state
+            raise
+        first = int(logits_np[0, 0, :self.model.cfg.vocab_size].argmax())
+        return state, first, s_pad
+
+    def _make_burst(self, k: int, eos_id: Optional[int]):
+        model, cfg = self.model, self.model.cfg
+        pad_id = self.pad_id
+
+        def burst(params, tok, cache, t, steps_left):
+            def step(carry, _):
+                tok, cache, t, steps_left = carry
+                live = steps_left > 0
+                logits, cache = model.decode(params, tok, cache, t)
+                nxt = jnp.argmax(logits[..., :cfg.vocab_size],
+                                 axis=-1).astype(jnp.int32)       # [B, 1]
+                ok = jnp.all(jnp.isfinite(
+                    logits.reshape(logits.shape[0], -1)), axis=-1)
+                # idle rows emit pad, keep their token/position frozen
+                # (their stale cache row is fully rewritten on insertion)
+                nxt = jnp.where(live[:, None], nxt, jnp.int32(pad_id))
+                tok = jnp.where(live[:, None], nxt, tok)
+                t = t + live.astype(jnp.int32)
+                steps_left = jnp.where(
+                    live, jnp.maximum(steps_left - 1, 0), steps_left)
+                if eos_id is not None:
+                    steps_left = jnp.where(live & (nxt[:, 0] == eos_id),
+                                           0, steps_left)
+                return (tok, cache, t, steps_left), (nxt[:, 0], live & ~ok,
+                                                     live)
+
+            (tok, cache, t, steps_left), (toks, bads, lives) = jax.lax.scan(
+                step, (tok, cache, t, steps_left), None, length=k)
+            return (tok, cache, t, steps_left, toks.T,
+                    jnp.any(bads, axis=0), jnp.sum(lives))
+
+        return jax.jit(burst, donate_argnums=(1, 2, 3, 4))
+
+    def decode_burst(self, state: SlotState, k: int,
+                     eos_id: Optional[int] = None):
+        """Run ``k`` decode steps over all slots without touching the
+        host: per-row position, max-new countdown, EOS and finite flags
+        are device-side inside one ``lax.scan``.  Returns
+        ``(state, toks [B, k], bad [B], live_steps)`` — reading the
+        returned arrays is the single device→host sync per burst."""
+        fn = self._bursts.get((k, eos_id))
+        if fn is None:
+            fn = self._bursts[(k, eos_id)] = self._make_burst(k, eos_id)
+        with obs.trace("engine.decode_burst"):
+            tok, cache, t, steps_left, toks, bad, live = fn(
+                self.params, state.tok, state.cache, state.t,
+                state.steps_left)
+        state = SlotState(cache, tok, t, steps_left)
+        return state, np.asarray(toks), np.asarray(bad), int(live)
+
+    def kill_slot(self, state: SlotState, slot: int) -> SlotState:
+        """Zero a slot's decode budget (deadline expiry) on device."""
+        return dataclasses.replace(
+            state, steps_left=self._kill(state.steps_left,
+                                         jnp.asarray(slot, jnp.int32)))
 
 
 class ContinuousBatcher:
@@ -325,7 +529,12 @@ class ContinuousBatcher:
                 continue
             reg.histogram("serve.wave_seconds").observe(
                 time.perf_counter() - t0)
-            reg.gauge("serve.slot_utilization").set(n_real / b)
+            # live-slot occupancy: fraction of slot-steps this wave spent
+            # decoding real requests (dummy slots and rows idling past
+            # their own max_new count as idle) — agrees with the
+            # SlotBatcher's serve.slot_idle_steps accounting
+            reg.gauge("serve.slot_utilization").set(
+                sum(min(r.max_new, max_new) for r in real) / (b * max_new))
             reg.counter("serve.waves").inc()
             now = time.monotonic()
             for i, r in enumerate(real):
@@ -336,3 +545,214 @@ class ContinuousBatcher:
                     self._finish(r, DEGRADED if degraded else OK,
                                  gen[i, :r.max_new].tolist())
         return self.done
+
+
+class SlotBatcher(ContinuousBatcher):
+    """Per-slot continuous batching: freed slots admit queued requests via
+    ``Engine.prefill_into`` (one batch=1 prefill spliced into the shared
+    cache) while occupied slots keep decoding — nothing is re-encoded.
+
+    Inherits the wave batcher's admission control / deadline / status
+    surface; the degradation ladder moves to per-REQUEST granularity:
+
+    * insertion failure (raise or non-finite via the ``serve.insert``
+      injection point) retries that ONE request with exact attention —
+      other slots never notice; past ``max_retries`` only that request is
+      ``failed``.
+    * a slot whose decode turns non-finite is re-inserted from its prompt
+      with exact attention (``resilience.serve.decode_restarts``) and its
+      output regenerated from scratch.
+    * decode-step faults (``serve.decode`` injection) retry the burst;
+      past ``max_retries`` the whole in-flight set fails and the device
+      state is rebuilt fresh.
+
+    The decode loop runs ``check_every``-step device bursts; under active
+    chaos plans the burst shrinks to 1 step so fault detection matches the
+    per-step engine semantics.
+    """
+
+    def __init__(self, engine: Engine, max_queue: Optional[int] = None,
+                 max_retries: int = 1, backoff_s: float = 0.02,
+                 check_every: int = 8, eos_id: Optional[int] = None):
+        super().__init__(engine, max_queue=max_queue,
+                         max_retries=max_retries, backoff_s=backoff_s)
+        self.check_every = max(1, check_every)
+        self.eos_id = eos_id
+
+    def _insert(self, state: SlotState, slot: int, req: Request,
+                occupied_pads: List[int]):
+        """Prefill one request into ``slot`` with the per-request
+        degradation ladder.  Returns ``(state, meta_or_None)``."""
+        reg = obs.get_registry()
+        eng = self.engine
+        last = None
+        for attempt in range(self.max_retries + 1):
+            use_mca = attempt == 0
+            if attempt:
+                reg.counter("resilience.serve.insert_retries").inc()
+                log.warning("insert failed (%s); retry %d/%d with exact "
+                            "attention", last, attempt, self.max_retries)
+                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+            try:
+                state, first, s_pad = eng.prefill_into(
+                    req.prompt, state, slot, req.max_new, mca=use_mca)
+            except ValueError:
+                raise    # deterministic (capacity): retrying can't help
+            except Exception as e:                         # noqa: BLE001
+                # recover the post-insertion state (the pre-insertion
+                # buffers were donated into the failed attempt)
+                state = getattr(e, "slot_state", state)
+                last = e
+                continue
+            degraded = attempt > 0 and eng.mca_enabled
+            if degraded:
+                reg.counter("resilience.serve.degraded_requests").inc()
+            # what a wave batcher would have re-prefilled right now: every
+            # OTHER occupied slot's padded prompt
+            reg.counter("serve.prefill_tokens_saved").inc(
+                sum(occupied_pads))
+            done = (self.eos_id is not None
+                    and first == self.eos_id) or req.max_new == 1
+            return state, {"req": req, "s_pad": s_pad,
+                           "remaining": 0 if done else req.max_new - 1,
+                           "out": [first], "degraded": degraded}
+        req.reason = str(last)
+        self._finish(req, FAILED)
+        reg.counter("resilience.serve.failed_requests").inc()
+        # the failed insertion may have armed the slot's decode budget
+        return eng.kill_slot(state, slot), None
+
+    def _finish_slot(self, meta) -> None:
+        req = meta["req"]
+        self._finish(req, DEGRADED if meta["degraded"] else OK,
+                     meta["out"][:req.max_new])
+        obs.get_registry().counter("serve.generated_tokens").inc(
+            len(meta["out"][:req.max_new]))
+
+    def run(self) -> Dict[int, List[int]]:
+        reg = obs.get_registry()
+        eng = self.engine
+        b = eng.batch
+        state = eng.init_slot_state()
+        slots: List[Optional[dict]] = [None] * b
+        decode_failures = 0
+        cum_live = cum_total = 0
+        while self.queue or any(s is not None for s in slots):
+            now = time.monotonic()
+            # drop expired queued work before it wastes an insertion
+            live_q = []
+            for r in self.queue:
+                if self._expired(r, now):
+                    self._finish(r, TIMEOUT)
+                    reg.counter("resilience.serve.timeouts").inc()
+                else:
+                    live_q.append(r)
+            self.queue = live_q
+            # admit queued requests into free slots, one insertion each
+            for slot in range(b):
+                if slots[slot] is not None or not self.queue:
+                    continue
+                req = self.queue.pop(0)
+                pads = [m["s_pad"] for m in slots if m is not None]
+                state, meta = self._insert(state, slot, req, pads)
+                if meta is None:
+                    continue
+                if meta["remaining"] <= 0:
+                    self._finish_slot(meta)
+                else:
+                    slots[slot] = meta
+            if not any(s is not None for s in slots):
+                continue        # failures drained work; check queue again
+            # K-step sync-free burst; K=1 under chaos so injected faults
+            # surface with per-step granularity
+            eff_k = 1 if resilience.active() else self.check_every
+            t0 = time.perf_counter()
+            try:
+                resilience.inject("serve.decode")
+                state, toks, bad, live_steps = eng.decode_burst(
+                    state, eff_k, self.eos_id)
+            except Exception as e:                         # noqa: BLE001
+                decode_failures += 1
+                reg.counter("resilience.serve.decode_retries").inc()
+                if decode_failures > self.max_retries:
+                    log.error("decode failed after retries: %s", e)
+                    for slot in range(b):
+                        if slots[slot] is None:
+                            continue
+                        req = slots[slot]["req"]
+                        req.reason = str(e)
+                        self._finish(req, FAILED)
+                        reg.counter(
+                            "resilience.serve.failed_requests").inc()
+                        slots[slot] = None
+                    state = eng.init_slot_state()
+                    decode_failures = 0
+                else:
+                    log.warning("decode burst failed (%s); retry %d/%d",
+                                e, decode_failures, self.max_retries)
+                    time.sleep(self.backoff_s * (2 ** decode_failures))
+                continue
+            decode_failures = 0
+            reg.histogram("serve.decode_step_seconds").observe(
+                (time.perf_counter() - t0) / eff_k)
+            reg.counter("serve.slot_idle_steps").inc(
+                eff_k * b - live_steps)
+            cum_live += live_steps
+            cum_total += eff_k * b
+            reg.gauge("serve.slot_utilization").set(cum_live / cum_total)
+            now = time.monotonic()
+            for slot in range(b):
+                meta = slots[slot]
+                if meta is None:
+                    continue
+                req = meta["req"]
+                take = min(meta["remaining"], eff_k)
+                got = toks[slot, :take].tolist()
+                if self.eos_id is not None and self.eos_id in got:
+                    got = got[:got.index(self.eos_id) + 1]
+                meta["out"].extend(got)
+                meta["remaining"] -= len(got)
+                if bool(bad[slot]):
+                    state, meta = self._restart_exact(state, slot, req)
+                    if meta is not None and meta["remaining"] <= 0:
+                        self._finish_slot(meta)
+                        meta = None
+                    slots[slot] = meta
+                elif self._expired(req, now):
+                    self._finish(req, TIMEOUT)
+                    reg.counter("resilience.serve.timeouts").inc()
+                    state = eng.kill_slot(state, slot)
+                    slots[slot] = None
+                elif (meta["remaining"] <= 0
+                      or (self.eos_id is not None
+                          and got and got[-1] == self.eos_id)):
+                    self._finish_slot(meta)
+                    slots[slot] = None
+        return self.done
+
+    def _restart_exact(self, state: SlotState, slot: int, req: Request):
+        """A slot's decode went non-finite: rebuild it from its prompt
+        with exact attention and regenerate from scratch.  Returns
+        ``(state, meta_or_None)`` — None means the request failed."""
+        reg = obs.get_registry()
+        eng = self.engine
+        reg.counter("resilience.serve.decode_restarts").inc()
+        log.warning("slot %d produced non-finite logits; restarting with "
+                    "exact attention", slot)
+        try:
+            state, first, s_pad = eng.prefill_into(
+                req.prompt, state, slot, req.max_new, mca=False)
+        except Exception as e:                             # noqa: BLE001
+            state = getattr(e, "slot_state", state)
+            req.reason = str(e)
+            self._finish(req, FAILED)
+            reg.counter("resilience.serve.failed_requests").inc()
+            return eng.kill_slot(state, slot), None
+        degraded = eng.mca_enabled
+        if degraded:
+            reg.counter("resilience.serve.degraded_requests").inc()
+        done = (self.eos_id is not None
+                and first == self.eos_id) or req.max_new == 1
+        return state, {"req": req, "s_pad": s_pad,
+                       "remaining": 0 if done else req.max_new - 1,
+                       "out": [first], "degraded": degraded}

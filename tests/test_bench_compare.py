@@ -28,6 +28,17 @@ def _report():
                 ]},
             ],
         },
+        "serve_throughput": {
+            "n_requests": 12, "n_tokens": 72, "batch": 4, "max_len": 96,
+            "rows": [
+                {"batcher": "wave", "tokens_per_s": 2000.0,
+                 "prefill_tokens": 372.0, "prefill_flops_ratio": 1.0,
+                 "parity_ok": True},
+                {"batcher": "per_slot", "tokens_per_s": 2500.0,
+                 "prefill_tokens": 208.0, "prefill_flops_ratio": 1.79,
+                 "parity_ok": True},
+            ],
+        },
         "fig1": None,
         "obs": {"counters": {}, "gauges": {}, "histograms": {}},
     }
@@ -83,6 +94,40 @@ def test_threshold_override_loosens_gate():
     cand = _report()
     cand["tables"]["table1"][0]["rows"][1]["acc"] = 0.70
     assert C.compare(_report(), cand, {"accuracy_abs": 0.2}) == []
+
+
+def test_serve_tokens_per_s_regression_flagged():
+    cand = _report()
+    cand["serve_throughput"]["rows"][1]["tokens_per_s"] = 2500.0 * 0.85
+    probs = C.compare(_report(), cand)               # 15% drop > 10% gate
+    assert any("per_slot" in p and "tokens_per_s" in p for p in probs)
+
+
+def test_serve_tokens_per_s_within_gate_ok():
+    cand = _report()
+    cand["serve_throughput"]["rows"][1]["tokens_per_s"] = 2500.0 * 0.95
+    assert C.compare(_report(), cand) == []
+
+
+def test_serve_parity_failure_flagged():
+    cand = _report()
+    cand["serve_throughput"]["rows"][1]["parity_ok"] = False
+    probs = C.compare(_report(), cand)
+    assert any("parity" in p for p in probs)
+
+
+def test_serve_prefill_ratio_drop_flagged():
+    cand = _report()
+    cand["serve_throughput"]["rows"][1]["prefill_flops_ratio"] = 1.2
+    probs = C.compare(_report(), cand)
+    assert any("prefill_flops_ratio" in p for p in probs)
+
+
+def test_serve_missing_section_flagged():
+    cand = _report()
+    del cand["serve_throughput"]
+    probs = C.compare(_report(), cand)
+    assert any("serve_throughput" in p and "missing" in p for p in probs)
 
 
 def test_profile_mismatch_raises():
@@ -146,12 +191,17 @@ def test_cli_bad_file_exits_two(tmp_path):
 
 
 def test_checked_in_baseline_self_compares_clean():
-    """The repo's BENCH_7.json must stay loadable and self-consistent."""
+    """The repo's BENCH_9.json must stay loadable and self-consistent."""
     import os
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_7.json")
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_9.json")
     with open(path) as f:
         rep = json.load(f)
     assert rep["schema_version"] == 1
     assert C.compare(rep, copy.deepcopy(rep)) == []
     assert {"table1", "table2", "table3"} <= set(rep["tables"])
     assert rep["kernels"], "kernel timings missing"
+    rows = {r["batcher"]: r for r in rep["serve_throughput"]["rows"]}
+    assert rows["per_slot"]["parity_ok"] is True
+    # acceptance bar: per-slot insertion saves >= 1.5x prefill FLOPs on
+    # the ragged Zipf workload
+    assert rows["per_slot"]["prefill_flops_ratio"] >= 1.5

@@ -170,3 +170,38 @@ def test_tiered_dispatch_kernel_path_matches_jnp():
                                        block=block, use_kernel=True)
     np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
                                rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------- kv_slot_update
+@pytest.mark.parametrize("b,s,trail", [
+    (4, 16, (2, 64)),       # GQA-shaped [B,S,hkv,dh], f=128 -> kernel path
+    (1, 8, (256,)),         # MLA latent [B,S,dl], kernel path
+    (3, 12, (5, 7)),        # f=35: not lane-aligned -> scatter fallback
+])
+def test_kv_slot_update_per_row_write(b, s, trail):
+    from repro.kernels import kv_slot_update
+    key = jax.random.PRNGKey(b * 100 + s)
+    kc, kn = jax.random.split(key)
+    cache = jax.random.normal(kc, (b, s) + trail)
+    new = jax.random.normal(kn, (b, 1) + trail)
+    pos = jnp.asarray([(3 * i + 1) % s for i in range(b)], jnp.int32)
+    out = kv_slot_update(cache, new, pos)
+    ref = cache.at[jnp.arange(b), pos].set(new[:, 0])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=0)
+
+
+def test_kv_slot_update_dispatch_counters():
+    """Lane-aligned feature dims take the Pallas kernel; others fall back
+    to the XLA scatter — recorded at dispatch time in repro.obs."""
+    from repro import obs
+    from repro.kernels import kv_slot_update
+    with obs.scoped() as reg:
+        kv_slot_update(jnp.zeros((2, 4, 128)), jnp.ones((2, 1, 128)),
+                       jnp.zeros(2, jnp.int32))
+        kv_slot_update(jnp.zeros((2, 4, 5)), jnp.ones((2, 1, 5)),
+                       jnp.zeros(2, jnp.int32))
+        snap = reg.snapshot()
+    c = snap["counters"]
+    assert c["kernels.kv_slot_update.kernel_calls"] == 1
+    assert c["kernels.kv_slot_update.fallback_calls"] == 1

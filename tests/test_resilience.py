@@ -586,3 +586,71 @@ def test_recovery_counters_visible_in_scoped_snapshot(tmp_path, mca_setup):
     assert c["resilience.ckpt.write_failures"] == 1
     resil = {k for k in c if k.startswith("resilience.")}
     assert len(resil) >= 4
+
+
+# ============================================ per-slot insertion chaos ==
+class TestSlotBatcherChaos:
+    def test_insert_corrupt_degrades_one_request(self, mca_setup):
+        """A poisoned insertion retries exact for THAT request only: it
+        finishes degraded and token-identical to an MCA-off engine; the
+        other request stays ok."""
+        from repro.serve import SlotBatcher
+        cfg, eng_on, eng_off = mca_setup
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(1, cfg.vocab_size, 6).astype(np.int32)
+                   for _ in range(2)]
+        want0 = eng_off.generate(np.stack([prompts[0]] * 2),
+                                 max_new=4)[0].tolist()
+        b = SlotBatcher(eng_on, backoff_s=0.0)
+        for uid, p in enumerate(prompts):
+            b.submit(Request(uid=uid, prompt=p, max_new=4))
+        with obs.scoped() as reg:
+            with resilience.chaos(Fault("serve.insert", mode="corrupt",
+                                        times=1)):
+                done = b.run()
+            snap = reg.snapshot()
+        assert b.status[0] == "degraded" and b.status[1] == "ok"
+        assert done[0] == want0, "exact retry must match the MCA-off engine"
+        assert len(done[1]) == 4
+        c = snap["counters"]
+        assert c["resilience.serve.insert_retries"] == 1
+        assert c["resilience.serve.degraded_requests"] == 1
+        assert c["resilience.injected.serve.insert"] == 1
+
+    def test_insert_persistent_fault_fails_only_requests(self, serve_setup):
+        """serve.insert raising on every attempt fails the requests — the
+        batcher never crashes and the engine stays usable."""
+        from repro.serve import SlotBatcher
+        cfg, model, params, eng = serve_setup
+        b = SlotBatcher(eng, max_retries=1, backoff_s=0.0)
+        p = np.ones(4, np.int32)
+        b.submit(Request(uid=0, prompt=p, max_new=2))
+        b.submit(Request(uid=1, prompt=p, max_new=2))
+        with obs.scoped() as reg:
+            with resilience.chaos(Fault("serve.insert", mode="raise",
+                                        times=None)):
+                done = b.run()
+            snap = reg.snapshot()
+        assert done == {}
+        assert b.status == {0: "failed", 1: "failed"}
+        assert snap["counters"]["resilience.serve.failed_requests"] == 2
+        # engine still serves after the chaos plan is gone
+        b2 = SlotBatcher(eng)
+        b2.submit(Request(uid=2, prompt=p, max_new=2))
+        assert len(b2.run()[2]) == 2
+
+    def test_decode_fault_retries_burst(self, serve_setup):
+        """A transient decode fault retries the burst; active chaos also
+        forces K=1 so the fault surfaces at per-step granularity."""
+        from repro.serve import SlotBatcher
+        cfg, model, params, eng = serve_setup
+        b = SlotBatcher(eng, backoff_s=0.0, check_every=8)
+        p = np.ones(5, np.int32)
+        b.submit(Request(uid=0, prompt=p, max_new=3))
+        with obs.scoped() as reg:
+            with resilience.chaos(Fault("serve.decode", mode="raise",
+                                        times=1)):
+                done = b.run()
+            snap = reg.snapshot()
+        assert b.status[0] == "ok" and len(done[0]) == 3
+        assert snap["counters"]["resilience.serve.decode_retries"] == 1
