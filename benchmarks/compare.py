@@ -40,7 +40,13 @@ DEFAULT_THRESHOLDS: Dict[str, float] = {
 
 def _load(path: str) -> dict:
     with open(path) as f:
-        return json.load(f)
+        data = json.load(f)
+    if "traceEvents" in data:
+        # --trace-out Chrome traces sit next to bench JSONs in CI
+        # artifacts; they are timelines, not reports, and never gate.
+        raise ValueError(f"{path} is a Chrome trace, not a benchmarks.run "
+                         "report — trace files are not compared")
+    return data
 
 
 def compare(base: dict, cand: dict,

@@ -4,10 +4,16 @@
 
 Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers in
 EXPERIMENTS.md in place (idempotent: regenerates between marker lines).
+
+With ``--bench bench_results.json`` it instead prints a latency
+percentile table (p50/p95/p99, from the obs histogram summaries the
+benchmark run recorded) to stdout.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import re
 
 from . import roofline
@@ -44,6 +50,29 @@ def dryrun_table(rows) -> str:
     return "\n".join(out)
 
 
+def _ms(v: float) -> str:
+    return "" if v is None or (isinstance(v, float) and math.isnan(v)) \
+        else f"{v * 1e3:.2f}"
+
+
+def latency_table(obs_snap: dict) -> str:
+    """Percentile table over every ``*_seconds`` histogram in a snapshot.
+
+    Columns are milliseconds; rows sorted by name.  Histograms that are
+    not durations (no ``_seconds`` suffix) are skipped.
+    """
+    hdr = "| histogram | count | p50 ms | p95 ms | p99 ms | max ms |"
+    out = [hdr, "|" + "---|" * 6]
+    for name, h in sorted(obs_snap.get("histograms", {}).items()):
+        if not name.endswith("_seconds"):
+            continue
+        out.append(f"| {name} | {int(h['count'])} | {_ms(h['p50'])} | "
+                   f"{_ms(h['p95'])} | {_ms(h['p99'])} | {_ms(h['max'])} |")
+    if len(out) == 2:
+        out.append("| (no duration histograms recorded) | | | | | |")
+    return "\n".join(out)
+
+
 def splice(md_path: str, marker: str, content: str) -> None:
     with open(md_path) as f:
         text = f.read()
@@ -63,7 +92,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="dryrun_results")
     ap.add_argument("--md", default="EXPERIMENTS.md")
+    ap.add_argument("--bench", default=None, metavar="JSON",
+                    help="print a p50/p95/p99 latency table from this "
+                         "benchmark JSON's obs snapshot and exit")
     args = ap.parse_args()
+    if args.bench:
+        with open(args.bench) as f:
+            data = json.load(f)
+        print(latency_table(data.get("obs", {})))
+        return
     rows = roofline.load_results(args.dir)
     splice(args.md, "DRYRUN_TABLE", dryrun_table(rows))
     sp = [r for r in rows if not r["cell"]["multi_pod"]

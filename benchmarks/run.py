@@ -47,18 +47,24 @@ def main() -> None:
     ap.add_argument("--params-cache", default=None, metavar="DIR",
                     help="cache trained table params here (content-hash "
                          "keyed); repeat runs skip training")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON span timeline "
+                         "here (enables span tracing for the run)")
     args = ap.parse_args()
     profile = "full" if args.full else args.profile
     fast = profile != "full"
     smoke = profile == "smoke"
 
+    if args.trace_out:
+        obs.enable_tracing(True)
     reg = obs.Registry()
     tables = {}
     fig1 = None
     roofline_summary = None
     with obs.scoped(reg), obs.trace("benchmarks.run"):
         from . import kernel_bench
-        kb = kernel_bench.run(fast=fast)
+        with obs.span("kernel_bench", cat="bench", track="bench"):
+            kb = kernel_bench.run(fast=fast)
         for r in kb:
             _csv(r["name"], r["us_per_call"],
                  r.get("flops_reduction", r.get("colmax_overhead", "")))
@@ -68,8 +74,9 @@ def main() -> None:
                           ("table2", table2_distilbert),
                           ("table3", table3_longformer)):
             t0 = time.time()
-            tab = mod.run(fast=fast, smoke=smoke,
-                          cache_dir=args.params_cache)
+            with obs.span(name, cat="bench", track="bench"):
+                tab = mod.run(fast=fast, smoke=smoke,
+                              cache_dir=args.params_cache)
             wall = time.time() - t0
             tables[name] = tab
             reg.histogram(f"bench.{name}.wall_seconds").observe(wall)
@@ -78,7 +85,8 @@ def main() -> None:
 
         from . import serve_throughput as serve_mod
         t0 = time.time()
-        serve_tp = serve_mod.run(fast=fast, smoke=smoke)
+        with obs.span("serve_throughput", cat="bench", track="bench"):
+            serve_tp = serve_mod.run(fast=fast, smoke=smoke)
         for row in serve_tp["rows"]:
             _csv(f"serve_{row['batcher']}", (time.time() - t0) * 1e6 / 2,
                  f"tokens_per_s={row['tokens_per_s']:.0f};"
@@ -123,6 +131,11 @@ def main() -> None:
     with open(args.json_out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(f"wrote {args.json_out} (profile={profile})")
+    if args.trace_out:
+        trace = obs.export_chrome_trace(args.trace_out, registry=reg)
+        obs.enable_tracing(False)
+        print(f"wrote {args.trace_out} "
+              f"({len(trace['traceEvents'])} trace events)")
 
 
 if __name__ == "__main__":

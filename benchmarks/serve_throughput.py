@@ -56,6 +56,12 @@ def _serve(batcher_cls, eng, prompts, max_news, **kw):
         wall = time.perf_counter() - t0
     snap = reg.snapshot()
     assert all(b.status[i] == "ok" for i in range(len(prompts))), b.status
+    if obs.tracing_enabled():
+        # the serve spans landed in this scoped registry; copy them out to
+        # the ambient one so run.py's --trace-out export sees the chains
+        ambient = obs.get_registry()
+        for s in reg.spans():
+            ambient.add_span(s)
     return out, wall, snap["counters"], snap["gauges"]
 
 

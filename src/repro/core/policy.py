@@ -19,6 +19,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import devtel
+
 from . import amm, dispatch, schedule
 
 Stats = dict
@@ -112,6 +114,12 @@ def mca_project(key: Optional[jax.Array], x: jax.Array, w: jax.Array,
         mca_fl = jnp.sum(hist * 2 * ladder_arr * block * f)
 
     y = y2.reshape(*lead, n, f)
+    # Device-side tier occupancy: emitted once per *execution* (vs the
+    # stats pytree, which the host reads once per step) so a decode scan
+    # accumulates every iteration's routing. No-op unless devtel enabled.
+    devtel.emit_vec(
+        tuple(f"mca.device_tier_hist.t{i}" for i in range(len(ladder))),
+        hist)
     stats = {"site": site, "exact_flops": exact_fl, "mca_flops": mca_fl,
              "tokens": flat_n, "tier_hist": hist,
              "mean_r_blocks": jnp.mean(r_blocks.astype(jnp.float32)),

@@ -17,10 +17,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .mca_matmul import _compiler_params
+from .telemetry import LANE_COUNT, LANE_LAUNCH, lane_inc, tel_shape
 
 
-def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, cm_ref, *,
+def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, *rest,
                    scale, causal, bq, bk, nq, off):
+    if len(rest) == 2:                    # telemetry output precedes scratch
+        tel_ref, cm_ref = rest
+    else:
+        tel_ref, (cm_ref,) = None, rest
+    bb = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)   # kv tile
     i = pl.program_id(3)   # q tile (innermost)
 
@@ -28,7 +35,14 @@ def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, cm_ref, *,
     def _init():
         cm_ref[...] = jnp.zeros_like(cm_ref)
 
+    if tel_ref is not None:
+        @pl.when((bb == 0) & (h == 0) & (j == 0) & (i == 0))
+        def _tel_init():
+            tel_ref[...] = lane_inc(LANE_LAUNCH)
+
     def _compute():
+        if tel_ref is not None:
+            tel_ref[...] += lane_inc(LANE_COUNT)   # score tiles recomputed
         q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, dh]
         k = k_ref[0, 0].astype(jnp.float32)                  # [bk, dh]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -55,12 +69,16 @@ def _colmax_kernel(q_ref, k_ref, lse_ref, o_ref, cm_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "telemetry"))
 def attn_colmax(q: jax.Array, k: jax.Array, lse: jax.Array, *, scale: float,
                 causal: bool = True, block_q: int = 128, block_k: int = 128,
-                interpret: bool = False) -> jax.Array:
+                interpret: bool = False, telemetry: bool = False):
     """q: [B, Hq, Sq, dh]; k: [B, Hkv, Skv, dh]; lse: [B, Hq, Sq] (from
-    flash_attention).  Returns colmax [B, Hq, Skv] float32.
+    flash_attention).  Returns colmax [B, Hq, Skv] float32 — or
+    ``(colmax, tel)`` with ``telemetry=True`` (lane 0 = 1 launch, lane 1 =
+    score tiles recomputed; all-"arbitrary" semantics, see
+    kernels/telemetry.py).
     """
     b, hq, sq, dh = q.shape
     _, hkv, skv, _ = k.shape
@@ -71,6 +89,15 @@ def attn_colmax(q: jax.Array, k: jax.Array, lse: jax.Array, *, scale: float,
     nq, nk = sq // bq, skv // bk
 
     grid = (b, hq, nk, nq)
+    out_specs = pl.BlockSpec((1, 1, bk), lambda bb, h, j, i: (bb, h, j))
+    out_shape = jax.ShapeDtypeStruct((b, hq, skv), jnp.float32)
+    semantics = ("parallel", "parallel", "parallel", "arbitrary")
+    if telemetry:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, tel_shape().shape[1]),
+                                  lambda bb, h, j, i: (0, 0))]
+        out_shape = [out_shape, tel_shape()]
+        semantics = ("arbitrary",) * 4
     fn = pl.pallas_call(
         functools.partial(_colmax_kernel, scale=scale, causal=causal,
                           bq=bq, bk=bk, nq=nq, off=skv - sq),
@@ -81,11 +108,10 @@ def attn_colmax(q: jax.Array, k: jax.Array, lse: jax.Array, *, scale: float,
                          lambda bb, h, j, i: (bb, h // group, j, 0)),
             pl.BlockSpec((1, 1, bq), lambda bb, h, j, i: (bb, h, i)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bk), lambda bb, h, j, i: (bb, h, j)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, skv), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((1, bk), jnp.float32)],
-        compiler_params=_compiler_params(
-            ("parallel", "parallel", "parallel", "arbitrary")),
+        compiler_params=_compiler_params(semantics),
         interpret=interpret,
     )
     return fn(q, k, lse)

@@ -27,23 +27,46 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .telemetry import LANE_COUNT, LANE_LAUNCH, lane_inc, tel_shape
 
-def _kernel(pos_ref, new_ref, cache_ref, out_ref):
+
+def _kernel(pos_ref, new_ref, cache_ref, out_ref, *tel):
     del pos_ref, cache_ref          # consumed by the index_map / aliasing
     out_ref[...] = new_ref[...]
+    if tel:
+        (tel_ref,) = tel
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _tel_init():
+            tel_ref[...] = lane_inc(LANE_LAUNCH)
+
+        tel_ref[...] += lane_inc(LANE_COUNT)      # one row written per program
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "telemetry"))
 def kv_slot_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
-                   *, interpret: bool = False) -> jax.Array:
+                   *, interpret: bool = False, telemetry: bool = False):
     """cache: [B, S, F]; new: [B, 1, F]; pos: [B] int32 -> updated cache.
 
     Rows with ``pos[b]`` outside [0, S) are clamped by the BlockSpec index
     math on TPU; callers must pass in-range positions (the serve engine's
     admission control guarantees it).
+
+    With ``telemetry=True`` returns ``(cache, tel)`` where the
+    ``(1, TEL_WIDTH)`` int32 buffer holds lane 0 = 1 launch, lane 1 = B
+    rows written (accumulated in-kernel; the 1-D grid is sequential, so
+    the shared telemetry tile needs no semantics override).
     """
     b, s, f = cache.shape
     assert new.shape == (b, 1, f), (new.shape, cache.shape)
+    out_specs = pl.BlockSpec((1, 1, f), lambda i, pos: (i, pos[i], 0))
+    out_shape = jax.ShapeDtypeStruct(cache.shape, cache.dtype)
+    if telemetry:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, tel_shape().shape[1]),
+                                  lambda i, pos: (0, 0))]
+        out_shape = [out_shape, tel_shape()]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                       # pos
         grid=(b,),
@@ -51,12 +74,12 @@ def kv_slot_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
             pl.BlockSpec((1, 1, f), lambda i, pos: (i, 0, 0)),     # new
             pl.BlockSpec(memory_space=pltpu.ANY),                  # cache
         ],
-        out_specs=pl.BlockSpec((1, 1, f), lambda i, pos: (i, pos[i], 0)),
+        out_specs=out_specs,
     )
     fn = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        out_shape=out_shape,
         input_output_aliases={2: 0},                 # cache buffer -> out
         interpret=interpret,
     )

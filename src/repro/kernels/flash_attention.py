@@ -18,12 +18,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .mca_matmul import _compiler_params
+from .telemetry import LANE_COUNT, LANE_LAUNCH, lane_inc, tel_shape
 
 NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
-                  acc_ref, m_ref, l_ref, *, scale, causal, bq, bk, nk, off):
+                  *rest, scale, causal, bq, bk, nk, off):
+    if len(rest) == 4:                    # telemetry output precedes scratch
+        tel_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        tel_ref = None
+        acc_ref, m_ref, l_ref = rest
+    bb = pl.program_id(0)
+    h = pl.program_id(1)
     i = pl.program_id(2)
     j = pl.program_id(3)
 
@@ -33,7 +41,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    if tel_ref is not None:
+        @pl.when((bb == 0) & (h == 0) & (i == 0) & (j == 0))
+        def _tel_init():
+            tel_ref[...] = lane_inc(LANE_LAUNCH)
+
     def _compute():
+        if tel_ref is not None:
+            tel_ref[...] += lane_inc(LANE_COUNT)   # score tiles computed
         q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, dh]
         k = k_ref[0, 0].astype(jnp.float32)                # [bk, dh]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -72,13 +87,19 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "telemetry"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False):
+                    block_k: int = 128, interpret: bool = False,
+                    telemetry: bool = False):
     """q: [B, Hq, Sq, dh]; k, v: [B, Hkv, Skv, dh]; Hq % Hkv == 0.
 
-    Returns (out [B, Hq, Sq, dh], lse [B, Hq, Sq] float32).
+    Returns (out [B, Hq, Sq, dh], lse [B, Hq, Sq] float32) — plus a
+    ``(1, TEL_WIDTH)`` int32 telemetry buffer (lane 0 = 1 launch, lane 1 =
+    score tiles actually computed, i.e. causal skipping excluded) when
+    ``telemetry=True``; the telemetry variant runs all-"arbitrary"
+    semantics so the shared tile is Megacore-safe.
     """
     b, hq, sq, dh = q.shape
     _, hkv, skv, _ = k.shape
@@ -91,6 +112,20 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     grid = (b, hq, nq, nk)
     kv_map = lambda bb, h, i, j: (bb, h // group, j, 0)
+    out_specs = [
+        pl.BlockSpec((1, 1, bq, dh), lambda bb, h, i, j: (bb, h, i, 0)),
+        pl.BlockSpec((1, 1, bq), lambda bb, h, i, j: (bb, h, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+    ]
+    semantics = ("parallel", "parallel", "parallel", "arbitrary")
+    if telemetry:
+        out_specs.append(pl.BlockSpec((1, tel_shape().shape[1]),
+                                      lambda bb, h, i, j: (0, 0)))
+        out_shape.append(tel_shape())
+        semantics = ("arbitrary",) * 4
     fn = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           bq=bq, bk=bk, nk=nk, off=skv - sq),
@@ -100,21 +135,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, 1, bk, dh), kv_map),
             pl.BlockSpec((1, 1, bk, dh), kv_map),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, bq, dh), lambda bb, h, i, j: (bb, h, i, 0)),
-            pl.BlockSpec((1, 1, bq), lambda bb, h, i, j: (bb, h, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
-            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, dh), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=_compiler_params(
-            ("parallel", "parallel", "parallel", "arbitrary")),
+        compiler_params=_compiler_params(semantics),
         interpret=interpret,
     )
     return fn(q, k, v)

@@ -4,11 +4,26 @@ On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
 body executes as jnp on CPU), so the whole framework is testable offline
 while the compiled path targets TPU VMEM/MXU tiling.
 
-Dispatch decisions (kernel vs reference fallback) are made here on static
-shapes and recorded in the ``repro.obs`` registry as
-``kernels.<op>.kernel_calls`` / ``kernels.<op>.fallback_calls``.  These are
-*dispatch-time* counters: under ``jax.jit`` this Python runs once per
-compilation, so they count distinct traced call sites, not device launches.
+Two layers of accounting, deliberately distinct (see ROADMAP § Observability):
+
+* **dispatch-time** — kernel-vs-fallback decisions are made here on static
+  shapes and recorded as ``kernels.<op>.kernel_calls`` /
+  ``kernels.<op>.fallback_calls``.  Under ``jax.jit`` this Python runs
+  once per compilation, so these count *distinct traced call sites* (how
+  many places in the program dispatched which path), not executions.
+* **device launches** — when ``obs.devtel`` is enabled, each wrapper also
+  emits per-*execution* counts: ``kernels.<op>.device_launches`` fires
+  once every time the op actually runs on the device (every ``lax.scan``
+  iteration of a decode burst, every call of a compiled function), plus a
+  per-op work count (``device_sampled_blocks`` for the MCA matmuls —
+  sampled block contributions accumulated in-kernel, so the ragged
+  kernel's skipped samples are excluded; ``device_tiles`` for
+  flash/colmax score tiles; ``device_rows_written`` for the KV update).
+  On the kernel path the counts come from an in-kernel telemetry buffer
+  (kernels/telemetry.py); on the fallback path the wrapper emits the
+  analytically equivalent values, so both paths report launches the same
+  way.  Telemetry is a trace-time flag: enable it *before* the first
+  compilation of the code under measurement.
 """
 from __future__ import annotations
 
@@ -16,12 +31,14 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.obs import devtel
 
 from . import attn_colmax as _colmax_mod
 from . import cache_update as _cache_mod
 from . import flash_attention as _flash_mod
 from . import mca_matmul as _mca_mod
 from . import ref as _ref
+from .telemetry import LANE_COUNT, LANE_LAUNCH
 
 
 def _interpret() -> bool:
@@ -33,18 +50,39 @@ def _count(op: str, used_kernel: bool) -> None:
     obs.get_registry().counter(f"kernels.{op}.{which}").inc()
 
 
+def _emit_tel(op: str, work_metric: str, launches, work) -> None:
+    """Per-execution device telemetry for one op (no-op when disabled)."""
+    devtel.emit_vec(
+        (f"kernels.{op}.device_launches", f"kernels.{op}.{work_metric}"),
+        (launches, work))
+
+
 def mca_matmul(x: jax.Array, w: jax.Array, idx: jax.Array, inv_rp: jax.Array,
                *, block: int = 128, block_m: int = 128, block_f: int = 128
                ) -> jax.Array:
-    """Fixed-R Monte-Carlo block-sampled matmul (one precision tier)."""
+    """Fixed-R Monte-Carlo block-sampled matmul (one precision tier).
+
+    Device telemetry: ``device_sampled_blocks`` counts one per
+    (row tile, sample) — ``m_tiles * R`` on the kernel path; the dense
+    fallback has no row tiling, so it counts the sample-list length ``R``.
+    """
     m, d = x.shape
     f = w.shape[1]
     bm, bf = min(block_m, m), min(block_f, f)
     use_kernel = m % bm == 0 and d % block == 0 and f % bf == 0
     _count("mca_matmul", use_kernel)
     if not use_kernel:
-        return _ref.ref_mca_matmul_fixed(x, w, idx, inv_rp, block)
+        out = _ref.ref_mca_matmul_fixed(x, w, idx, inv_rp, block)
+        _emit_tel("mca_matmul", "device_sampled_blocks", 1, idx.shape[0])
+        return out
     with obs.trace("mca_matmul"):
+        if devtel.enabled():
+            out, tel = _mca_mod.mca_matmul_fixed(
+                x, w, idx, inv_rp, block=block, block_m=bm, block_f=bf,
+                interpret=_interpret(), telemetry=True)
+            _emit_tel("mca_matmul", "device_sampled_blocks",
+                      tel[0, LANE_LAUNCH], tel[0, LANE_COUNT])
+            return out
         return _mca_mod.mca_matmul_fixed(
             x, w, idx, inv_rp, block=block, block_m=bm, block_f=bf,
             interpret=_interpret())
@@ -78,6 +116,11 @@ def mca_matmul_ragged(x, w, r_tile, idx, inv_rp, *, block=128,
     The row-tile size is pinned by ``r_tile``'s length: the kernel needs
     ``min(block_m, m)`` row tiles to line up with it, otherwise we fall
     back to the dense masked oracle with ``bm = m // len(r_tile)``.
+
+    Device telemetry: ``device_sampled_blocks == sum(r_tile)`` on both
+    paths (blocks the ragged kernel actually accumulated — its
+    ``pl.when`` skipping makes this the device-only truth the dispatcher
+    cannot see).
     """
     m, d = x.shape
     f = w.shape[1]
@@ -88,9 +131,19 @@ def mca_matmul_ragged(x, w, r_tile, idx, inv_rp, *, block=128,
                   and d % block == 0 and f % bf == 0)
     _count("mca_matmul_ragged", use_kernel)
     if not use_kernel:
-        return _ragged_fallback(x, w, r_tile, idx, inv_rp, block,
-                                m // m_tiles)
+        out = _ragged_fallback(x, w, r_tile, idx, inv_rp, block,
+                               m // m_tiles)
+        _emit_tel("mca_matmul_ragged", "device_sampled_blocks",
+                  1, jnp.sum(r_tile))
+        return out
     with obs.trace("mca_matmul_ragged"):
+        if devtel.enabled():
+            out, tel = _mca_mod.mca_matmul_ragged(
+                x, w, r_tile, idx, inv_rp, block=block, block_m=bm,
+                block_f=bf, interpret=_interpret(), telemetry=True)
+            _emit_tel("mca_matmul_ragged", "device_sampled_blocks",
+                      tel[0, LANE_LAUNCH], tel[0, LANE_COUNT])
+            return out
         return _mca_mod.mca_matmul_ragged(
             x, w, r_tile, idx, inv_rp, block=block, block_m=bm,
             block_f=bf, interpret=_interpret())
@@ -105,6 +158,10 @@ def kv_slot_update(cache: jax.Array, new: jax.Array, pos: jax.Array
     scalar prefetch (DMA writes only the B touched rows, in place through
     ``input_output_aliases``); when the flattened feature size is not
     lane-aligned the XLA scatter fallback runs instead.
+
+    Device telemetry: ``device_rows_written == B`` per execution on both
+    paths — a K-step decode burst therefore shows K launches where the
+    dispatch counter shows one traced call site.
     """
     b, s = cache.shape[0], cache.shape[1]
     f = 1
@@ -113,23 +170,47 @@ def kv_slot_update(cache: jax.Array, new: jax.Array, pos: jax.Array
     use_kernel = f % 128 == 0
     _count("kv_slot_update", use_kernel)
     if not use_kernel:
-        return cache.at[jnp.arange(b), pos].set(new[:, 0])
+        out = cache.at[jnp.arange(b), pos].set(new[:, 0])
+        _emit_tel("kv_slot_update", "device_rows_written", 1, b)
+        return out
     with obs.trace("kv_slot_update"):
-        out = _cache_mod.kv_slot_update(
-            cache.reshape(b, s, f), new.reshape(b, 1, f), pos,
-            interpret=_interpret())
+        if devtel.enabled():
+            out, tel = _cache_mod.kv_slot_update(
+                cache.reshape(b, s, f), new.reshape(b, 1, f), pos,
+                interpret=_interpret(), telemetry=True)
+            _emit_tel("kv_slot_update", "device_rows_written",
+                      tel[0, LANE_LAUNCH], tel[0, LANE_COUNT])
+        else:
+            out = _cache_mod.kv_slot_update(
+                cache.reshape(b, s, f), new.reshape(b, 1, f), pos,
+                interpret=_interpret())
     return out.reshape(cache.shape)
 
 
 def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128):
-    """Flash attention fwd; returns (out, lse)."""
+    """Flash attention fwd; returns (out, lse).
+
+    Device telemetry: ``device_tiles`` counts score tiles actually
+    computed in-kernel (causally skipped tiles excluded); the dense
+    fallback reports 0 tiles (no tiling), launches still count 1 per
+    execution.
+    """
     sq, skv = q.shape[2], k.shape[2]
     bq, bk = min(block_q, sq), min(block_k, skv)
     use_kernel = sq % bq == 0 and skv % bk == 0
     _count("flash_attention", use_kernel)
     if not use_kernel:
-        return _ref.ref_attention(q, k, v, scale=scale, causal=causal)
+        out = _ref.ref_attention(q, k, v, scale=scale, causal=causal)
+        _emit_tel("flash_attention", "device_tiles", 1, 0)
+        return out
     with obs.trace("flash_attention"):
+        if devtel.enabled():
+            out, lse, tel = _flash_mod.flash_attention(
+                q, k, v, scale=scale, causal=causal, block_q=bq,
+                block_k=bk, interpret=_interpret(), telemetry=True)
+            _emit_tel("flash_attention", "device_tiles",
+                      tel[0, LANE_LAUNCH], tel[0, LANE_COUNT])
+            return out, lse
         return _flash_mod.flash_attention(
             q, k, v, scale=scale, causal=causal, block_q=bq,
             block_k=bk, interpret=_interpret())
@@ -137,18 +218,30 @@ def flash_attention(q, k, v, *, scale, causal=True, block_q=128, block_k=128):
 
 def attn_colmax(q, k, lse, *, scale, causal=True, block_q=128, block_k=128,
                 reduce_heads=True):
-    """Column max of A from (q, k, lse); optionally reduced over heads."""
+    """Column max of A from (q, k, lse); optionally reduced over heads.
+
+    Device telemetry mirrors flash_attention: ``device_tiles`` = score
+    tiles recomputed in-kernel, fallback reports (1 launch, 0 tiles).
+    """
     sq, skv = q.shape[2], k.shape[2]
     bq, bk = min(block_q, sq), min(block_k, skv)
     use_kernel = sq % bq == 0 and skv % bk == 0
     _count("attn_colmax", use_kernel)
     if not use_kernel:
         cm = _ref.ref_colmax(q, k, lse, scale=scale, causal=causal)
+        _emit_tel("attn_colmax", "device_tiles", 1, 0)
     else:
         with obs.trace("attn_colmax"):
-            cm = _colmax_mod.attn_colmax(
-                q, k, lse, scale=scale, causal=causal, block_q=bq,
-                block_k=bk, interpret=_interpret())
+            if devtel.enabled():
+                cm, tel = _colmax_mod.attn_colmax(
+                    q, k, lse, scale=scale, causal=causal, block_q=bq,
+                    block_k=bk, interpret=_interpret(), telemetry=True)
+                _emit_tel("attn_colmax", "device_tiles",
+                          tel[0, LANE_LAUNCH], tel[0, LANE_COUNT])
+            else:
+                cm = _colmax_mod.attn_colmax(
+                    q, k, lse, scale=scale, causal=causal, block_q=bq,
+                    block_k=bk, interpret=_interpret())
     if reduce_heads:
         cm = jnp.max(cm, axis=1)        # [B, Skv]
     return cm

@@ -1,0 +1,43 @@
+"""In-kernel telemetry buffer conventions shared by the Pallas kernels.
+
+Each kernel optionally emits a ``(1, TEL_WIDTH)`` int32 output block,
+mapped to the same (0, 0) tile for every grid program, accumulated
+in-kernel:
+
+* lane ``LANE_LAUNCH`` — set to 1 once per kernel execution (first grid
+  program), so summing across executions counts device launches;
+* lane ``LANE_COUNT``  — per-op work counter (sampled blocks accumulated,
+  tiles computed, rows written — see each kernel's docstring);
+* remaining lanes are reserved (zero).
+
+Because every program writes the same output tile, telemetry variants
+must run with all-``"arbitrary"`` dimension semantics: Megacore may
+otherwise split ``"parallel"`` grid dimensions across cores, making a
+shared accumulator block unsafe on real TPUs.  The wrappers in
+``kernels/ops.py`` only request telemetry when ``obs.devtel`` is enabled,
+so the default path keeps its parallel semantics.
+
+Lane ops are vector-shaped (one-hot ``(1, TEL_WIDTH)`` increments built
+from ``broadcasted_iota``) rather than scalar ref stores — scalar int
+stores at dynamic offsets are not reliably supported by the TPU vector
+ISA, one-hot adds are.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TEL_WIDTH = 8
+LANE_LAUNCH = 0
+LANE_COUNT = 1
+
+
+def lane_inc(lane: int):
+    """One-hot ``(1, TEL_WIDTH)`` int32 increment for ``lane``."""
+    return (jax.lax.broadcasted_iota(jnp.int32, (1, TEL_WIDTH), 1)
+            == lane).astype(jnp.int32)
+
+
+def tel_shape():
+    """out_shape entry for the telemetry output."""
+    return jax.ShapeDtypeStruct((1, TEL_WIDTH), jnp.int32)

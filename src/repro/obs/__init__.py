@@ -1,24 +1,42 @@
 """repro.obs — lightweight observability for the MCA pipeline.
 
-Three pieces, importable as ``from repro import obs``:
+Five pieces, importable as ``from repro import obs``:
 
 - metrics: ``obs.get_registry()`` returns the active :class:`Registry`
   (counters / gauges / histograms / timers); ``obs.scoped()`` isolates
-  collection for a test or a benchmark run.
-- tracing: ``obs.trace("name")`` / ``@obs.annotate("name")`` emit
-  ``jax.profiler`` spans on the hot paths (no-ops without a profiler).
-- sink: ``obs.JsonlSink(path)`` appends structured JSON-lines records.
+  collection for a test or a benchmark run; ``obs.snapshot()`` snapshots
+  the active registry and with ``aggregate="psum"`` sums additive leaves
+  across SPMD processes.
+- spans: ``obs.span(name, cat=..., track=...)`` records host-side
+  timeline spans (request chains, trainer steps) when enabled via
+  ``obs.enable_tracing()`` / ``obs.tracing()``;
+  ``obs.export_chrome_trace(path)`` writes Perfetto-loadable JSON.
+- device telemetry: ``obs.devtel`` accumulates per-execution kernel
+  launch / sampled-block counts delivered from the device
+  (``kernels.<op>.device_launches`` — vs the dispatch-time
+  ``kernel_calls`` which count traced call sites).
+- profiler hooks: ``obs.trace("name")`` / ``@obs.annotate("name")`` emit
+  ``jax.profiler`` annotations on the hot paths (no-ops without a
+  profiler).
+- sink: ``obs.JsonlSink(path)`` appends structured JSON-lines records
+  (flushed per write; fsync on close).
 
 Metric naming convention: dotted ``<area>.<metric>`` —
 ``kernels.flash_attention.kernel_calls``, ``train.flops_reduction``,
 ``serve.wave_seconds``.  See ROADMAP.md § Observability for the full list.
 """
+from . import devtel
+from .aggregate import snapshot
 from .registry import (Counter, Gauge, Histogram, Registry, get_registry,
                        scoped)
 from .sink import JsonlSink, read_jsonl
 from .trace import annotate, trace
+from .tracing import (enable_tracing, export_chrome_trace, mark, record_span,
+                      span, tracing, tracing_enabled)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "get_registry", "scoped",
-    "JsonlSink", "read_jsonl", "annotate", "trace",
+    "snapshot", "JsonlSink", "read_jsonl", "annotate", "trace", "devtel",
+    "enable_tracing", "tracing", "tracing_enabled", "span", "record_span",
+    "mark", "export_chrome_trace",
 ]

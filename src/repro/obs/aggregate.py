@@ -1,0 +1,109 @@
+"""SPMD-aggregated snapshots: psum counter/histogram leaves at snapshot time.
+
+``obs.snapshot()`` is the module-level snapshot entry point.  With
+``aggregate="psum"`` the additive leaves — every counter (including the
+merged device-telemetry totals) plus each histogram's ``count``/``sum`` —
+are summed across *all* processes with a ``lax.psum`` collective, and
+histogram ``min``/``max`` are combined with ``pmin``/``pmax``, so every
+process sees identical cluster-wide totals.  Per the repo's multi-device
+test policy this is exercised by an 8-device subprocess test in
+``tests/test_distributed.py``.
+
+With world size 1 (single process, single device — e.g. the main pytest
+process, which conftest pins to one CPU device) the call returns the
+plain local snapshot without staging any collective.
+
+Non-additive leaves stay local: gauges are last-write-wins per process,
+and histogram ``mean`` is recomputed from the global sum/count while
+``p50/p95/p99`` remain per-process sample estimates (noted in the README).
+
+All processes must call ``snapshot(aggregate="psum")`` with the same
+metric names in the same program order — standard collective discipline;
+metric names are config-derived, not data-derived, so this holds.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+from .registry import Registry, get_registry
+
+
+def snapshot(
+    aggregate: Optional[str] = None,
+    registry: Optional[Registry] = None,
+    include_device: bool = True,
+) -> Dict[str, Dict]:
+    """Snapshot the active registry, optionally SPMD-aggregated.
+
+    ``aggregate=None`` → local :meth:`Registry.snapshot`;
+    ``aggregate="psum"`` → additive leaves summed across all processes
+    (see module docstring). Anything else raises ``ValueError``.
+    """
+    reg = registry if registry is not None else get_registry()
+    snap = reg.snapshot(include_device=include_device)
+    if aggregate is None:
+        return snap
+    if aggregate != "psum":
+        raise ValueError(f"unknown aggregate mode: {aggregate!r} (use None or 'psum')")
+    return _psum_snapshot(snap)
+
+
+def _psum_snapshot(snap: Dict[str, Dict]) -> Dict[str, Dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if jax.process_count() == 1 and jax.device_count() == 1:
+        return snap                      # world size 1: nothing to aggregate
+
+    cnames = sorted(snap["counters"])
+    hnames = sorted(snap["histograms"])
+    sums = [float(snap["counters"][k]) for k in cnames]
+    mins, maxs = [], []
+    for k in hnames:
+        h = snap["histograms"][k]
+        sums += [float(h["count"]), float(h["sum"])]
+        # nan (empty histogram) must not poison pmin/pmax on other hosts
+        mins.append(float(h["min"]) if not math.isnan(h["min"]) else math.inf)
+        maxs.append(float(h["max"]) if not math.isnan(h["max"]) else -math.inf)
+    if not sums and not mins:
+        return snap
+
+    n_local = jax.local_device_count()
+
+    def _all(reduce_fn, vec, divide: bool):
+        if not vec:
+            return np.zeros((0,), np.float32)
+        v = jnp.asarray(vec, jnp.float32)
+        if divide:
+            v = v / n_local              # each local replica carries 1/n_local
+        tiled = jnp.tile(v[None], (n_local, 1))
+        out = jax.pmap(lambda x: reduce_fn(x, "i"), axis_name="i")(tiled)
+        return np.asarray(out[0])
+
+    g_sum = _all(jax.lax.psum, sums, divide=True)
+    g_min = _all(jax.lax.pmin, mins, divide=False)
+    g_max = _all(jax.lax.pmax, maxs, divide=False)
+
+    out = {
+        "counters": {},
+        "gauges": dict(snap["gauges"]),
+        "histograms": {},
+    }
+    i = 0
+    for k in cnames:
+        out["counters"][k] = float(g_sum[i])
+        i += 1
+    for j, k in enumerate(hnames):
+        h = dict(snap["histograms"][k])
+        count, total = float(g_sum[i]), float(g_sum[i + 1])
+        i += 2
+        h["count"] = count
+        h["sum"] = total
+        h["mean"] = total / count if count else math.nan
+        mn, mx = float(g_min[j]), float(g_max[j])
+        h["min"] = mn if math.isfinite(mn) else math.nan
+        h["max"] = mx if math.isfinite(mx) else math.nan
+        out["histograms"][k] = h
+    return out

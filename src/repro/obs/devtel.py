@@ -1,0 +1,140 @@
+"""Device-side kernel telemetry: launch counts measured at execution time.
+
+The dispatch-time counters in ``kernels/ops.py``
+(``kernels.<op>.kernel_calls|fallback_calls``) fire once per *traced call
+site*: under ``jax.jit`` the wrapper's Python body runs at trace time, so
+a decode burst that scans a kernel K times still counts 1.  This module
+closes that gap.  Kernels accumulate a small int32 telemetry buffer
+*in-kernel* (launch flag, sampled-block counts — see ``TEL_WIDTH`` lanes
+in kernels/mca_matmul.py), the wrapper hands the traced values to
+:func:`emit` / :func:`emit_vec`, and a ``jax.debug.callback`` delivers
+them to a process-global accumulator once per device execution —
+including every iteration of a ``lax.scan`` and every call of a compiled
+function.
+
+Metric names follow the registry convention:
+
+* ``kernels.<op>.device_launches`` — executions of the op (kernel or
+  fallback body), counted on the device path;
+* ``kernels.<op>.device_sampled_blocks`` — MCA ops: sampled block
+  contributions actually accumulated in-kernel (the ragged kernel's
+  ``pl.when(k < r_tile[i])`` skipping makes this device-only truth);
+* ``kernels.<op>.device_rows_written`` / ``device_tiles`` — per-op extras;
+* ``mca.device_tier_hist.t{i}`` — per-tier token counts emitted by
+  ``core.policy.mca_project`` at execution time (must agree with the
+  stats-pytree ``tier_hist``).
+
+:meth:`repro.obs.Registry.snapshot` merges accumulated totals into its
+``counters`` section, windowed to activity since the registry was created
+(so ``obs.scoped()`` collection keeps working).  The store itself is
+process-global: device truth has no thread affinity (callbacks run on
+runtime threads, not the caller's).
+
+Disabled by default.  When off, :func:`emit` is a trace-time no-op — no
+callback is staged, nothing runs on device or host.  The flag is read at
+TRACE time: enable telemetry *before* the first compilation of the code
+you want counted; already-compiled executables will not retrace when the
+flag flips.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Dict, Iterator, Sequence
+
+_lock = threading.Lock()
+_totals: Dict[str, float] = {}
+_enabled = False
+_ever_enabled = False       # gates the (jax) effects barrier in sync()
+
+
+def enable(flag: bool = True) -> None:
+    """Turn device telemetry on/off (trace-time flag; see module doc)."""
+    global _enabled, _ever_enabled
+    _enabled = bool(flag)
+    _ever_enabled = _ever_enabled or _enabled
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+@contextlib.contextmanager
+def enabled_scope(flag: bool = True) -> Iterator[None]:
+    """Temporarily flip the telemetry flag (tests)."""
+    global _enabled
+    prev = _enabled
+    enable(flag)
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def _accum(names: tuple, values) -> None:
+    """Callback target: runs once per device execution."""
+    import numpy as np
+    vals = np.ravel(np.asarray(values))
+    with _lock:
+        for name, v in zip(names, vals):
+            _totals[name] = _totals.get(name, 0.0) + float(v)
+
+
+def emit(name: str, value) -> None:
+    """Stage a per-execution accumulation of ``value`` into ``name``.
+
+    ``value`` may be a traced scalar or a plain number; the callback fires
+    every time the enclosing computation executes on device.  No-op (and
+    zero cost) when telemetry is disabled at trace time.
+    """
+    emit_vec((name,), (value,))
+
+
+def emit_vec(names: Sequence[str], values) -> None:
+    """Stage accumulation of a small vector; ``values`` is a traced array
+    or a sequence of scalars, matched to ``names`` by position."""
+    if not _enabled:
+        return
+    import jax
+    import jax.numpy as jnp
+    if isinstance(values, (list, tuple)):
+        values = jnp.stack([jnp.asarray(v, jnp.float32) for v in values])
+    else:
+        values = jnp.asarray(values, jnp.float32)
+    jax.debug.callback(functools.partial(_accum, tuple(names)), values)
+
+
+def sync() -> None:
+    """Block until staged callbacks have delivered (device truth is
+    asynchronous); no-op if telemetry was never enabled this process."""
+    if not _ever_enabled:
+        return
+    import jax
+    jax.effects_barrier()
+
+
+def totals() -> Dict[str, float]:
+    """Copy of the process-global accumulated totals (after a sync)."""
+    sync()
+    with _lock:
+        return dict(_totals)
+
+
+def since(base: Dict[str, float]) -> Dict[str, float]:
+    """Accumulation deltas vs a baseline captured by :func:`totals`;
+    zero-delta names are dropped."""
+    cur = totals()
+    out = {}
+    for name, v in cur.items():
+        d = v - base.get(name, 0.0)
+        if d != 0.0:
+            out[name] = d
+    return out
+
+
+def reset() -> None:
+    """Clear the process-global store (tests)."""
+    sync()
+    with _lock:
+        _totals.clear()

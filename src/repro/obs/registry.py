@@ -23,7 +23,10 @@ import contextlib
 import math
 import threading
 import time
-from typing import Dict, Iterator, List, Optional
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional
+
+from . import devtel
 
 
 def _as_float(v) -> float:
@@ -106,7 +109,8 @@ class Histogram:
         return {"count": self.count, "sum": self.total, "mean": self.mean,
                 "min": self.min if self.min is not None else math.nan,
                 "max": self.max if self.max is not None else math.nan,
-                "p50": self.percentile(50), "p95": self.percentile(95)}
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99)}
 
 
 class _Timer:
@@ -124,11 +128,20 @@ class _Timer:
 class Registry:
     """Name-keyed metric store; metrics auto-create on first access."""
 
+    # Bound on retained spans per registry; beyond it the oldest are
+    # dropped (and counted) so a long serve run cannot grow unbounded.
+    MAX_SPANS = 50_000
+
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, Histogram] = {}
+        self._spans: Deque[dict] = deque(maxlen=self.MAX_SPANS)
+        self.spans_dropped = 0
+        # Device-telemetry window: this registry reports only accumulation
+        # since its creation (so obs.scoped() isolation extends to devtel).
+        self._dev_base = devtel.totals()
 
     def counter(self, name: str) -> Counter:
         with self._lock:
@@ -146,23 +159,48 @@ class Registry:
         """Context manager recording elapsed seconds into histogram ``name``."""
         return _Timer(self.histogram(name))
 
-    def snapshot(self) -> Dict[str, Dict]:
-        """Plain-dict view of every metric (JSON-serializable)."""
+    def add_span(self, span: dict) -> None:
+        """Append a completed tracing span (see obs.tracing); bounded."""
+        with self._lock:
+            if len(self._spans) == self._spans.maxlen:
+                self.spans_dropped += 1
+            self._spans.append(span)
+
+    def spans(self) -> List[dict]:
+        """Copy of the retained spans, in record order."""
+        with self._lock:
+            return list(self._spans)
+
+    def snapshot(self, include_device: bool = True) -> Dict[str, Dict]:
+        """Plain-dict view of every metric (JSON-serializable).
+
+        Device-telemetry totals accumulated since this registry was
+        created (``kernels.<op>.device_launches`` etc., see obs.devtel)
+        are merged into ``counters``; spans are not included — use
+        :meth:`spans` / ``obs.export_chrome_trace``.
+        """
         with self._lock:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
             hists = dict(self._hists)
+        counter_vals = {k: c.value for k, c in counters.items()}
+        if include_device:
+            counter_vals.update(devtel.since(self._dev_base))
         return {
-            "counters": {k: c.value for k, c in sorted(counters.items())},
+            "counters": {k: counter_vals[k] for k in sorted(counter_vals)},
             "gauges": {k: g.value for k, g in sorted(gauges.items())},
             "histograms": {k: h.summary() for k, h in sorted(hists.items())},
         }
 
     def reset(self) -> None:
+        dev_base = devtel.totals()
         with self._lock:
             self._counters.clear()
             self._gauges.clear()
             self._hists.clear()
+            self._spans.clear()
+            self.spans_dropped = 0
+            self._dev_base = dev_base
 
 
 _GLOBAL = Registry()

@@ -90,6 +90,7 @@ class Request:
     status: str = "queued"
     reason: Optional[str] = None          # set when rejected/failed
     submit_t: float = 0.0
+    submit_pc: float = 0.0                # perf_counter stamp (tracing)
 
 
 @dataclasses.dataclass
@@ -177,6 +178,13 @@ class Engine:
                                     else make_prefill_into(None))
         self._kill = jax.jit(kill)
         self._bursts: Dict = {}          # (k, eos_id) -> jitted scan burst
+        # perf_counter windows of the most recent prefill / decode loop /
+        # insertion / burst — batchers read these to attribute per-request
+        # tracing spans without re-timing the jit calls
+        self.last_prefill_t = (0.0, 0.0)
+        self.last_decode_t = (0.0, 0.0)
+        self.last_insert_t = (0.0, 0.0)
+        self.last_burst_t = (0.0, 0.0)
 
     def _record_mca(self, stats, frac: float) -> None:
         """frac: fraction of batch rows that are real requests — dummy
@@ -222,9 +230,16 @@ class Engine:
             if (lens < s).any():
                 batch_in["pos_offset"] = jnp.asarray(s - lens, jnp.int32)
         prefill = self._prefill if mca else self._prefill_exact
-        with reg.timer("serve.prefill_seconds"), obs.trace("engine.prefill"):
+        t0p = time.perf_counter()
+        with obs.trace("engine.prefill"):
             cache, logits, stats = prefill(self.params, batch_in)
             logits = jax.block_until_ready(logits)
+        t1p = time.perf_counter()
+        reg.histogram("serve.prefill_seconds").observe(t1p - t0p)
+        self.last_prefill_t = (t0p, t1p)
+        obs.record_span("prefill", t0p, t1p, cat="serve.engine",
+                        track="engine",
+                        args={"batch": b, "s": int(s), "mca": bool(mca)})
         logits = resilience.inject("serve.prefill", logits)
         if check_finite:
             resilience.check_finite(logits, "prefill logits")
@@ -240,7 +255,7 @@ class Engine:
         hist = reg.histogram("serve.decode_step_seconds")
         obs_every = self.decode_obs_every
         since = 0
-        t_last = time.perf_counter()
+        t0d = t_last = time.perf_counter()
         with obs.trace("engine.decode_loop"):
             resilience.inject("serve.decode")
             for _ in range(max_new - 1):
@@ -256,6 +271,10 @@ class Engine:
             tok = jax.block_until_ready(tok)
         if since:
             hist.observe((time.perf_counter() - t_last) / since)
+        t1d = time.perf_counter()
+        self.last_decode_t = (t0d, t1d)
+        obs.record_span("decode_loop", t0d, t1d, cat="serve.engine",
+                        track="engine", args={"steps": max_new - 1})
         if max_new > 1 and check_finite and bool(bad):
             raise resilience.NonFiniteError(
                 "non-finite values in decode logits")
@@ -303,7 +322,8 @@ class Engine:
         padded = np.full((1, s_pad), self.pad_id, np.int32)
         padded[0, s_pad - n:] = prompt
         fn = self._prefill_into if mca else self._prefill_into_exact
-        with reg.timer("serve.prefill_seconds"), obs.trace("engine.insert"):
+        t0 = time.perf_counter()
+        with obs.trace("engine.insert"):
             cache, tok, t, steps_left, logits, stats = fn(
                 self.params, jnp.asarray(padded),
                 jnp.asarray([s_pad - n], jnp.int32), state.cache,
@@ -311,6 +331,11 @@ class Engine:
                 jnp.asarray(slot, jnp.int32),
                 jnp.asarray(max_new - 1, jnp.int32))
             logits = jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+        reg.histogram("serve.prefill_seconds").observe(t1 - t0)
+        self.last_insert_t = (t0, t1)
+        obs.record_span("insert", t0, t1, cat="serve.engine", track="engine",
+                        args={"slot": slot, "s_pad": s_pad, "mca": bool(mca)})
         state = SlotState(cache, tok, t, steps_left)
         reg.counter("serve.insertions").inc()
         reg.counter("serve.prefill_tokens").inc(s_pad)
@@ -369,12 +394,18 @@ class Engine:
         fn = self._bursts.get((k, eos_id))
         if fn is None:
             fn = self._bursts[(k, eos_id)] = self._make_burst(k, eos_id)
+        t0 = time.perf_counter()
         with obs.trace("engine.decode_burst"):
             tok, cache, t, steps_left, toks, bad, live = fn(
                 self.params, state.tok, state.cache, state.t,
                 state.steps_left)
         state = SlotState(cache, tok, t, steps_left)
-        return state, np.asarray(toks), np.asarray(bad), int(live)
+        toks, bad, live = np.asarray(toks), np.asarray(bad), int(live)
+        t1 = time.perf_counter()
+        self.last_burst_t = (t0, t1)
+        obs.record_span("decode_burst", t0, t1, cat="serve.engine",
+                        track="engine", args={"k": k, "live_steps": live})
+        return state, toks, bad, live
 
     def kill_slot(self, state: SlotState, slot: int) -> SlotState:
         """Zero a slot's decode budget (deadline expiry) on device."""
@@ -388,7 +419,13 @@ class ContinuousBatcher:
     and a graceful-degradation ladder (see module docstring).  Finished
     slots immediately take the next queued request (prefill is re-run for
     the whole slot batch at toy scale; production would use per-slot
-    prefill insertion)."""
+    prefill insertion).
+
+    When tracing is enabled (``obs.enable_tracing``), each request gets a
+    span chain ``queue → prefill → decode → finish`` on the track
+    ``<trace_cat>/req<uid>``."""
+
+    trace_cat = "serve.wave"
 
     def __init__(self, engine: Engine, max_queue: Optional[int] = None,
                  max_retries: int = 1, backoff_s: float = 0.02):
@@ -420,14 +457,20 @@ class ContinuousBatcher:
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             return self._reject(req, "queue_full")
         req.submit_t = time.monotonic()
+        req.submit_pc = time.perf_counter()
         req.status = "queued"
         self.queue.append(req)
         return req.status
+
+    def _track(self, req: Request) -> str:
+        return f"{self.trace_cat}/req{req.uid}"
 
     def _finish(self, req: Request, status: str,
                 tokens: Optional[List[int]] = None) -> None:
         req.status = status
         self.status[req.uid] = status
+        obs.mark("finish", cat=self.trace_cat, track=self._track(req),
+                 args={"status": status})
         if tokens is not None:
             req.out = tokens
             self.done[req.uid] = tokens
@@ -517,6 +560,10 @@ class ContinuousBatcher:
             lens = np.asarray([len(r.prompt) for r in wave], np.int32)
             max_new = max(r.max_new for r in wave)
             t0 = time.perf_counter()
+            if obs.tracing_enabled():
+                for r in real:       # queued-until-wave-start per request
+                    obs.record_span("queue", r.submit_pc, t0,
+                                    cat=self.trace_cat, track=self._track(r))
             try:
                 gen, degraded = self._run_wave(prompts, max_new, lens,
                                                n_real)
@@ -527,8 +574,24 @@ class ContinuousBatcher:
                     self._finish(r, FAILED)
                     reg.counter("resilience.serve.failed_requests").inc()
                 continue
-            reg.histogram("serve.wave_seconds").observe(
-                time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            reg.histogram("serve.wave_seconds").observe(t1 - t0)
+            if obs.tracing_enabled():
+                # attribute the wave's engine windows to every member so
+                # each request track shows its own prefill/decode spans
+                obs.record_span("wave", t0, t1, cat=self.trace_cat,
+                                track="waves",
+                                args={"n_real": n_real,
+                                      "degraded": degraded})
+                for r in real:
+                    obs.record_span("prefill", *self.engine.last_prefill_t,
+                                    cat=self.trace_cat,
+                                    track=self._track(r),
+                                    args={"degraded": degraded})
+                    obs.record_span("decode", *self.engine.last_decode_t,
+                                    cat=self.trace_cat,
+                                    track=self._track(r),
+                                    args={"steps": max_new - 1})
             # live-slot occupancy: fraction of slot-steps this wave spent
             # decoding real requests (dummy slots and rows idling past
             # their own max_new count as idle) — agrees with the
@@ -571,6 +634,8 @@ class SlotBatcher(ContinuousBatcher):
     per-step engine semantics.
     """
 
+    trace_cat = "serve.per_slot"
+
     def __init__(self, engine: Engine, max_queue: Optional[int] = None,
                  max_retries: int = 1, backoff_s: float = 0.02,
                  check_every: int = 8, eos_id: Optional[int] = None):
@@ -607,6 +672,10 @@ class SlotBatcher(ContinuousBatcher):
             degraded = attempt > 0 and eng.mca_enabled
             if degraded:
                 reg.counter("resilience.serve.degraded_requests").inc()
+            obs.record_span("prefill", *eng.last_insert_t,
+                            cat=self.trace_cat, track=self._track(req),
+                            args={"slot": slot, "s_pad": s_pad,
+                                  "degraded": degraded})
             # what a wave batcher would have re-prefilled right now: every
             # OTHER occupied slot's padded prompt
             reg.counter("serve.prefill_tokens_saved").inc(
@@ -653,6 +722,8 @@ class SlotBatcher(ContinuousBatcher):
                 if slots[slot] is not None or not self.queue:
                     continue
                 req = self.queue.pop(0)
+                obs.record_span("queue", req.submit_pc, time.perf_counter(),
+                                cat=self.trace_cat, track=self._track(req))
                 pads = [m["s_pad"] for m in slots if m is not None]
                 state, meta = self._insert(state, slot, req, pads)
                 if meta is None:
@@ -695,6 +766,13 @@ class SlotBatcher(ContinuousBatcher):
             decode_failures = 0
             reg.histogram("serve.decode_step_seconds").observe(
                 (time.perf_counter() - t0) / eff_k)
+            if obs.tracing_enabled():
+                for s_meta in slots:      # one decode span per live slot
+                    if s_meta is not None:
+                        obs.record_span("decode", *eng.last_burst_t,
+                                        cat=self.trace_cat,
+                                        track=self._track(s_meta["req"]),
+                                        args={"k": eff_k})
             reg.counter("serve.slot_idle_steps").inc(
                 eff_k * b - live_steps)
             cum_live += live_steps
@@ -751,6 +829,10 @@ class SlotBatcher(ContinuousBatcher):
         degraded = eng.mca_enabled
         if degraded:
             reg.counter("resilience.serve.degraded_requests").inc()
+        obs.record_span("prefill", *eng.last_insert_t, cat=self.trace_cat,
+                        track=self._track(req),
+                        args={"slot": slot, "restart": True,
+                              "degraded": degraded})
         done = (self.eos_id is not None
                 and first == self.eos_id) or req.max_new == 1
         return state, {"req": req, "s_pad": s_pad,

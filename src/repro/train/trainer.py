@@ -169,6 +169,13 @@ class Trainer:
         reg = obs.get_registry()
         reg.counter("train.steps").inc()
         reg.histogram("train.step_seconds").observe(dt)
+        span = getattr(self, "_last_step_span", None)
+        if span is not None:
+            obs.record_span("train.step", span[0], span[1], cat="train",
+                            track="trainer",
+                            args={"step": step, "status": status,
+                                  "loss": loss if math.isfinite(loss)
+                                  else str(loss)})
         record: Dict[str, Any] = {"step": step, "loss": loss, "dt": dt,
                                   "status": status}
         if "mca_exact_flops" in metrics:
@@ -245,16 +252,19 @@ class Trainer:
             batch = jax.tree.map(jax.numpy.asarray, batch)
             self.watchdog.arm(step)
             t0 = time.time()
+            tp0 = time.perf_counter()
             resilience.inject("train.step")
             with obs.trace("trainer.step"):
                 new_params, new_opt, metrics = self.train_step(
                     self.params, self.opt_state, batch)
                 loss = float(metrics["total_loss"])   # sync point
+            tp1 = time.perf_counter()
             loss = resilience.inject("train.loss", loss)
             if loss is None:
                 loss = float("nan")
             self.watchdog.disarm()
             dt = time.time() - t0
+            self._last_step_span = (tp0, tp1)
             if self._step_is_bad(loss, metrics):
                 self._bad_streak += 1
                 reg.counter("train.skipped_steps").inc()

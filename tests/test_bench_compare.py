@@ -205,3 +205,61 @@ def test_checked_in_baseline_self_compares_clean():
     # acceptance bar: per-slot insertion saves >= 1.5x prefill FLOPs on
     # the ragged Zipf workload
     assert rows["per_slot"]["prefill_flops_ratio"] >= 1.5
+
+
+def test_extra_obs_keys_never_gate():
+    """The obs section (p99 percentiles, device_launches counters, span
+    histograms) is informational — compare must not read it."""
+    cand = _report()
+    cand["obs"] = {
+        "counters": {"kernels.kv_slot_update.device_launches": 37.0},
+        "gauges": {"serve.slot_utilization": 0.9},
+        "histograms": {"serve.prefill_seconds": {
+            "count": 4, "sum": 0.4, "mean": 0.1, "min": 0.05, "max": 0.2,
+            "p50": 0.1, "p95": 0.2, "p99": 0.2}},
+    }
+    assert C.compare(_report(), cand) == []
+
+
+def test_trace_file_rejected_not_compared(tmp_path, capsys):
+    """--trace-out Chrome traces live next to bench JSONs in CI
+    artifacts; feeding one to the gate must fail loudly (exit 2), never
+    be silently diffed."""
+    b = _write(tmp_path, "b.json", _report())
+    t = _write(tmp_path, "trace.json",
+               {"traceEvents": [], "displayTimeUnit": "ms"})
+    assert C.main([b, t]) == 2
+    assert "Chrome trace" in capsys.readouterr().err
+    assert C.main([t, b]) == 2
+
+
+def test_latency_table_renders_percentiles():
+    from benchmarks import report as R
+    h = {"count": 3, "sum": 0.3, "mean": 0.1, "min": 0.05, "max": 0.2,
+         "p50": 0.1, "p95": 0.18, "p99": 0.2}
+    snap = {"histograms": {"serve.prefill_seconds": h,
+                           "train.step_seconds": dict(h, count=7),
+                           "serve.queue_depth": h}}    # not a duration
+    md = R.latency_table(snap)
+    assert "| serve.prefill_seconds | 3 | 100.00 | 180.00 | 200.00 |" in md
+    assert "train.step_seconds" in md
+    assert "queue_depth" not in md
+    assert R.latency_table({"histograms": {}}).count("\n") == 2
+
+
+def test_report_bench_mode_prints_table(tmp_path, capsys):
+    from benchmarks import report as R
+    rep = _report()
+    rep["obs"]["histograms"] = {"serve.wave_seconds": {
+        "count": 2, "sum": 0.2, "mean": 0.1, "min": 0.08, "max": 0.12,
+        "p50": 0.1, "p95": 0.12, "p99": 0.12}}
+    p = _write(tmp_path, "bench.json", rep)
+    import sys
+    argv = sys.argv
+    sys.argv = ["report", "--bench", p]
+    try:
+        R.main()
+    finally:
+        sys.argv = argv
+    out = capsys.readouterr().out
+    assert "serve.wave_seconds" in out and "p99 ms" in out

@@ -137,6 +137,59 @@ _SHARD_SAMPLING_SCRIPT = textwrap.dedent("""
 """)
 
 
+_PSUM_SNAPSHOT_SCRIPT = textwrap.dedent("""
+    # SPMD-aggregated obs snapshots: additive leaves psum across the world
+    # without double counting (each local replica carries 1/n_local), min/
+    # max combine with pmin/pmax, empty-histogram nan does not poison them,
+    # and repeated aggregated snapshots see identical totals.
+    import math
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from repro import obs
+    from repro.obs import devtel
+
+    assert jax.device_count() == 8
+    reg = obs.Registry()
+    with obs.scoped(reg):
+        reg.counter("a").inc(3)
+        reg.counter("b").inc(0.5)
+        h = reg.histogram("lat_seconds")
+        for v in (1.0, 2.0, 5.0):
+            h.observe(v)
+        reg.histogram("empty")
+        agg = obs.snapshot(aggregate="psum")
+
+    assert agg["counters"]["a"] == 3.0, agg["counters"]
+    assert agg["counters"]["b"] == 0.5, agg["counters"]
+    hh = agg["histograms"]["lat_seconds"]
+    assert hh["count"] == 3.0 and hh["sum"] == 8.0, hh
+    assert abs(hh["mean"] - 8.0 / 3.0) < 1e-6, hh
+    assert hh["min"] == 1.0 and hh["max"] == 5.0, hh
+    he = agg["histograms"]["empty"]
+    assert he["count"] == 0.0, he
+    assert math.isnan(he["min"]) and math.isnan(he["max"]), he
+    agg2 = obs.snapshot(aggregate="psum", registry=reg)
+    assert agg2["counters"] == agg["counters"]
+    assert agg2["histograms"] == agg["histograms"]
+
+    # device telemetry emitted under pmap: one callback per device, all
+    # eight land in the same process-global store and the snapshot merge
+    devtel.enable(True)
+
+    @jax.pmap
+    def f(x):
+        devtel.emit("spmd.launches", 1.0)
+        return x * 2
+
+    jax.block_until_ready(f(jnp.arange(8.0)))
+    devtel.sync()
+    snap = reg.snapshot()
+    assert snap["counters"]["spmd.launches"] == 8.0, snap["counters"]
+    print("OK psum snapshot")
+""")
+
+
 def _run(script: str) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -163,3 +216,9 @@ def test_mca_under_spmd_8dev():
 def test_sharded_sampling_independent_across_shards():
     out = _run(_SHARD_SAMPLING_SCRIPT)
     assert "OK shard sampling" in out
+
+
+@pytest.mark.slow
+def test_psum_snapshot_8dev():
+    out = _run(_PSUM_SNAPSHOT_SCRIPT)
+    assert "OK psum snapshot" in out

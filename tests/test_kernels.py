@@ -205,3 +205,194 @@ def test_kv_slot_update_dispatch_counters():
     c = snap["counters"]
     assert c["kernels.kv_slot_update.kernel_calls"] == 1
     assert c["kernels.kv_slot_update.fallback_calls"] == 1
+
+
+# ------------------------------------------------------ device telemetry
+class TestDeviceTelemetry:
+    """Per-execution launch counts (repro.obs.devtel) — distinct from the
+    dispatch-time kernel_calls/fallback_calls counters: a jitted K-step
+    decode scan is ONE traced call site but K device launches.  Telemetry
+    is a trace-time flag, so every test compiles fresh functions under
+    ``devtel.enabled_scope()``."""
+
+    def _deltas(self, fn):
+        from repro.obs import devtel
+        base = devtel.totals()
+        jax.block_until_ready(fn())
+        devtel.sync()
+        return devtel.since(base)
+
+    def test_kv_update_scan_counts_every_launch_kernel_path(self):
+        from repro.kernels import kv_slot_update
+        from repro.obs import devtel
+        b, s, f, steps = 2, 16, 128, 5
+        with devtel.enabled_scope():
+            @jax.jit
+            def burst(cache, new, pos):
+                def body(c, i):
+                    return kv_slot_update(c, new, pos + i), ()
+                return jax.lax.scan(body, cache, jnp.arange(steps))[0]
+            d = self._deltas(lambda: burst(jnp.zeros((b, s, f)),
+                                           jnp.ones((b, 1, f)),
+                                           jnp.zeros(b, jnp.int32)))
+        assert d["kernels.kv_slot_update.device_launches"] == steps
+        assert d["kernels.kv_slot_update.device_rows_written"] == steps * b
+
+    def test_kv_update_scan_counts_every_launch_fallback_path(self):
+        from repro.kernels import kv_slot_update
+        from repro.obs import devtel
+        b, s, f, steps = 3, 16, 96, 4          # f % 128 != 0 -> scatter
+        with devtel.enabled_scope():
+            @jax.jit
+            def burst(cache, new, pos):
+                def body(c, i):
+                    return kv_slot_update(c, new, pos + i), ()
+                return jax.lax.scan(body, cache, jnp.arange(steps))[0]
+            d = self._deltas(lambda: burst(jnp.zeros((b, s, f)),
+                                           jnp.ones((b, 1, f)),
+                                           jnp.zeros(b, jnp.int32)))
+        assert d["kernels.kv_slot_update.device_launches"] == steps
+        assert d["kernels.kv_slot_update.device_rows_written"] == steps * b
+
+    def test_mca_fixed_sampled_blocks_kernel_path(self):
+        from repro.obs import devtel
+        key = jax.random.PRNGKey(3)
+        kx, kw, ks = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (256, 512))   # 2 row tiles of 128
+        w = jax.random.normal(kw, (512, 128))
+        probs = amm.block_probs(w, 128)
+        idx, inv_rp = amm.draw_block_samples(ks, probs, 3)
+        with devtel.enabled_scope():
+            d = self._deltas(lambda: mca_matmul(x, w, idx, inv_rp,
+                                                block=128))
+        assert d["kernels.mca_matmul.device_launches"] == 1
+        # kernel accumulates one count per (row tile, sample): 2 * 3
+        assert d["kernels.mca_matmul.device_sampled_blocks"] == 6
+
+    def test_mca_fixed_sampled_blocks_fallback_path(self):
+        from repro.obs import devtel
+        key = jax.random.PRNGKey(4)
+        kx, kw, ks = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (200, 512))   # 200 % 128 != 0 -> ref
+        w = jax.random.normal(kw, (512, 128))
+        probs = amm.block_probs(w, 128)
+        idx, inv_rp = amm.draw_block_samples(ks, probs, 3)
+        with devtel.enabled_scope():
+            d = self._deltas(lambda: mca_matmul(x, w, idx, inv_rp,
+                                                block=128))
+        assert d["kernels.mca_matmul.device_launches"] == 1
+        # dense fallback has no row tiling: counts the sample list length
+        assert d["kernels.mca_matmul.device_sampled_blocks"] == 3
+
+    def test_mca_ragged_counts_accumulated_blocks_only(self):
+        from repro.obs import devtel
+        key = jax.random.PRNGKey(5)
+        kx, kw, ks = jax.random.split(key, 3)
+        m, d_, f, block, rmax = 256, 512, 128, 128, 4
+        x = jax.random.normal(kx, (m, d_))
+        w = jax.random.normal(kw, (d_, f))
+        r_tile = jnp.asarray([1, 3], jnp.int32)  # 2 row tiles
+        probs = amm.block_probs(w, block)
+        idx = jax.random.categorical(ks, jnp.log(probs), shape=(2, rmax))
+        inv_rp = 1.0 / (r_tile[:, None] * probs[idx])
+        with devtel.enabled_scope():
+            dl = self._deltas(lambda: mca_matmul_ragged(
+                x, w, r_tile, idx, inv_rp, block=block, block_m=128))
+        assert dl["kernels.mca_matmul_ragged.device_launches"] == 1
+        # pl.when skips samples past r_tile[t]: only sum(r_tile) counted
+        assert dl["kernels.mca_matmul_ragged.device_sampled_blocks"] == 4
+
+    def test_flash_attention_counts_causal_tiles(self):
+        from repro.obs import devtel
+        key = jax.random.PRNGKey(6)
+        kq, kk, kv = jax.random.split(key, 3)
+        b, h, s, dh = 1, 2, 192, 64             # 3x3 tile grid at 64
+        q = jax.random.normal(kq, (b, h, s, dh))
+        k = jax.random.normal(kk, (b, h, s, dh))
+        v = jax.random.normal(kv, (b, h, s, dh))
+        with devtel.enabled_scope():
+            d = self._deltas(lambda: flash_attention(
+                q, k, v, scale=0.125, causal=True, block_q=64, block_k=64))
+        assert d["kernels.flash_attention.device_launches"] == 1
+        # causal skips strictly-upper tiles: b*h*6 of 9 computed
+        assert d["kernels.flash_attention.device_tiles"] == b * h * 6
+
+    def test_attn_colmax_counts_tiles_and_matches_flash(self):
+        from repro.obs import devtel
+        key = jax.random.PRNGKey(7)
+        kq, kk, kv = jax.random.split(key, 3)
+        b, h, s, dh = 1, 2, 192, 64
+        q = jax.random.normal(kq, (b, h, s, dh))
+        k = jax.random.normal(kk, (b, h, s, dh))
+        v = jax.random.normal(kv, (b, h, s, dh))
+        with devtel.enabled_scope():
+            _, lse = flash_attention(q, k, v, scale=0.125, causal=True,
+                                     block_q=64, block_k=64)
+            d = self._deltas(lambda: attn_colmax(
+                q, k, lse, scale=0.125, causal=True, block_q=64,
+                block_k=64))
+        assert d["kernels.attn_colmax.device_launches"] == 1
+        assert d["kernels.attn_colmax.device_tiles"] == b * h * 6
+
+    def test_disabled_emits_nothing(self):
+        from repro.obs import devtel
+        key = jax.random.PRNGKey(8)
+        kx, kw, ks = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (128, 256))
+        w = jax.random.normal(kw, (256, 128))
+        probs = amm.block_probs(w, 128)
+        idx, inv_rp = amm.draw_block_samples(ks, probs, 2)
+        assert not devtel.enabled()
+        d = self._deltas(lambda: mca_matmul(x, w, idx, inv_rp, block=128))
+        assert not any(k.startswith("kernels.mca_matmul.device")
+                       for k in d)
+
+    def test_device_tier_hist_matches_stats_pytree(self):
+        """The per-execution mca.device_tier_hist.t{i} totals must agree
+        with the stats-pytree tier_hist the host reads once per step."""
+        from repro.core.policy import MCAConfig, mca_project
+        from repro.obs import devtel
+        cfg = MCAConfig(enabled=True, alpha=0.4, block=16,
+                        sites=("v_proj",))
+        n, dm, f = 64, 64, 32
+        key = jax.random.PRNGKey(9)
+        kx, kw, ki = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (n, dm))
+        w = jax.random.normal(kw, (dm, f))
+        imp = jnp.abs(jax.random.normal(ki, (n,)))
+        with devtel.enabled_scope():
+            @jax.jit
+            def run(key):
+                _, stats = mca_project(key, x, w, imp, seq_len=n, cfg=cfg,
+                                       site="v_proj")
+                return stats["tier_hist"]
+            base = devtel.totals()
+            hist = np.asarray(run(jax.random.PRNGKey(10)))
+            devtel.sync()
+            deltas = devtel.since(base)
+        assert int(hist.sum()) == n
+        for i, hv in enumerate(hist):
+            assert deltas.get(f"mca.device_tier_hist.t{i}", 0.0) == float(hv)
+
+    def test_registry_snapshot_windows_device_totals(self):
+        """Registries only see devtel activity since their creation, so
+        scoped() collection stays isolated despite the global store."""
+        from repro import obs
+        from repro.obs import devtel
+        b, s, f = 4, 8, 128
+        with devtel.enabled_scope():
+            @jax.jit
+            def one(cache, new, pos):
+                from repro.kernels import kv_slot_update
+                return kv_slot_update(cache, new, pos)
+            args = (jnp.zeros((b, s, f)), jnp.ones((b, 1, f)),
+                    jnp.zeros(b, jnp.int32))
+            jax.block_until_ready(one(*args))    # activity BEFORE scope
+            devtel.sync()
+            with obs.scoped() as reg:
+                jax.block_until_ready(one(*args))
+                devtel.sync()
+                snap = reg.snapshot()
+        c = snap["counters"]
+        assert c["kernels.kv_slot_update.device_launches"] == 1
+        assert c["kernels.kv_slot_update.device_rows_written"] == b

@@ -5,6 +5,7 @@ import threading
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import obs
 
@@ -165,3 +166,350 @@ class TestTrainerIntegration:
         assert recs[-1]["kind"] == "snapshot"
         # trainer history mirrors the records
         assert res["history"][-1]["flops_reduction"] > 1.0
+
+
+class TestTracing:
+    def test_disabled_is_complete_noop(self):
+        """Satellite: with tracing off, span machinery must not touch the
+        registry, must not allocate per call, and must not raise."""
+        assert not obs.tracing_enabled()
+        with obs.scoped() as reg:
+            with obs.span("x", cat="c", extra=1):
+                pass
+            obs.record_span("y", 0.0, 1.0, cat="c")
+            obs.mark("z", cat="c")
+        assert reg.spans() == []
+        # disabled span() hands back one shared null context
+        assert obs.span("a") is obs.span("b")
+
+    def test_noop_inside_jit(self):
+        """Span calls inside jit-traced Python: no exceptions, no registry
+        writes while disabled (trace-time Python runs once per compile)."""
+        import jax
+
+        with obs.scoped() as reg:
+            @jax.jit
+            def f(x):
+                with obs.span("traced", cat="jit"):
+                    obs.mark("inside", cat="jit")
+                    return x * 2
+
+            assert int(f(jnp.asarray(3))) == 6
+            assert int(f(jnp.asarray(4))) == 8     # cached executable too
+        assert reg.spans() == []
+
+    def test_tracing_ctx_restores_prior_state(self):
+        assert not obs.tracing_enabled()
+        with obs.tracing():
+            assert obs.tracing_enabled()
+            with obs.tracing(False):
+                assert not obs.tracing_enabled()
+            assert obs.tracing_enabled()
+        assert not obs.tracing_enabled()
+
+    def test_span_records_interval_args_and_error(self):
+        with obs.scoped() as reg, obs.tracing():
+            with obs.span("ok", cat="t", track="tr", k=1):
+                pass
+            with pytest.raises(ValueError):
+                with obs.span("boom", cat="t"):
+                    raise ValueError("x")
+            obs.record_span("manual", 10.0, 10.5, cat="t", args={"a": 2})
+            obs.mark("instant", cat="t", track="tr")
+        spans = reg.spans()
+        by_name = {s["name"]: s for s in spans}
+        assert set(by_name) == {"ok", "boom", "manual", "instant"}
+        assert by_name["ok"]["track"] == "tr"
+        assert by_name["ok"]["args"] == {"k": 1}
+        assert by_name["ok"]["dur"] >= 0.0
+        assert by_name["boom"]["args"]["error"] == "ValueError"
+        assert by_name["boom"]["track"] == "t"     # falls back to cat
+        assert by_name["manual"]["dur"] == 0.5
+        assert by_name["instant"]["dur"] == 0.0
+
+    def test_span_deque_bounded_and_drop_counted(self, monkeypatch):
+        monkeypatch.setattr(obs.Registry, "MAX_SPANS", 4)
+        reg = obs.Registry()
+        with obs.scoped(reg), obs.tracing():
+            for i in range(7):
+                obs.mark(f"s{i}", cat="t")
+        assert len(reg.spans()) == 4
+        assert reg.spans_dropped == 3
+        assert reg.spans()[0]["name"] == "s3"      # oldest evicted first
+
+    def test_export_chrome_trace(self, tmp_path):
+        with obs.scoped() as reg, obs.tracing():
+            obs.record_span("a", 5.0, 5.25, cat="c1", track="t1",
+                            args={"k": 1})
+            obs.record_span("b", 5.1, 5.2, cat="c2", track="t2")
+        path = str(tmp_path / "trace.json")
+        trace = obs.export_chrome_trace(path, registry=reg)
+        on_disk = json.loads(open(path).read())
+        assert on_disk == json.loads(json.dumps(trace))
+        evs = trace["traceEvents"]
+        meta = [e for e in evs if e["ph"] == "M"]
+        xs = [e for e in evs if e["ph"] == "X"]
+        assert {m["args"]["name"] for m in meta} == {"repro", "t1", "t2"}
+        assert len(xs) == 2
+        a = next(e for e in xs if e["name"] == "a")
+        b = next(e for e in xs if e["name"] == "b")
+        assert a["ts"] == 0.0 and a["dur"] == 250_000.0     # rebased, us
+        assert b["ts"] == 100_000.0 and b["dur"] == 100_000.0
+        assert a["tid"] != b["tid"]                # one timeline per track
+        assert a["args"] == {"k": 1}
+
+    def test_export_empty_registry(self, tmp_path):
+        trace = obs.export_chrome_trace(str(tmp_path / "e.json"),
+                                        registry=obs.Registry())
+        assert [e["ph"] for e in trace["traceEvents"]] == ["M"]
+
+
+class TestRequestChains:
+    """Acceptance: one complete queue->prefill->decode->finish chain per
+    request, from each batcher, exported as valid Chrome-trace JSON."""
+
+    @pytest.fixture(scope="class")
+    def serve_setup(self):
+        import jax
+        from repro.configs import get_config
+        from repro.models import build_model, reduced
+
+        cfg = reduced(get_config("starcoder2-3b"), n_layers=2,
+                      vocab_size=128)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return cfg, model, params
+
+    def _serve_traced(self, serve_setup, batcher_cls, **kw):
+        from repro.serve import Engine, Request
+
+        cfg, model, params = serve_setup
+        eng = Engine(model, params, batch_size=2, max_len=64)
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (4, 9, 6)]
+        with obs.scoped() as reg, obs.tracing():
+            b = batcher_cls(eng, **kw)
+            for i, p in enumerate(prompts):
+                assert b.submit(Request(uid=i, prompt=p,
+                                        max_new=4)) == "queued"
+            b.run()
+        assert all(b.status[i] == "ok" for i in range(len(prompts)))
+        return reg, len(prompts)
+
+    def _check_chains(self, reg, n_req, cat):
+        chains = {}
+        for s in reg.spans():
+            if s["track"].startswith(f"{cat}/req"):
+                chains.setdefault(s["track"], []).append(s)
+        assert len(chains) == n_req, sorted(chains)
+        for track, spans in chains.items():
+            names = [s["name"] for s in spans]
+            assert names[0] == "queue", (track, names)
+            assert names[1] == "prefill", (track, names)
+            assert names[-1] == "finish", (track, names)
+            decodes = names[2:-1]
+            assert decodes and set(decodes) == {"decode"}, (track, names)
+            # same perf_counter clock: phases are ordered in time
+            end = [s["ts"] + s["dur"] for s in spans]
+            start = [s["ts"] for s in spans]
+            assert all(start[i + 1] >= end[i] - 1e-3
+                       for i in range(len(spans) - 1)), (track, names)
+            assert spans[-1]["args"]["status"] == "ok"
+
+    @pytest.mark.parametrize("which", ["wave", "per_slot"])
+    def test_batcher_emits_complete_chains(self, serve_setup, which,
+                                           tmp_path):
+        from repro.serve import ContinuousBatcher, SlotBatcher
+
+        cls, cat, kw = {
+            "wave": (ContinuousBatcher, "serve.wave", {}),
+            "per_slot": (SlotBatcher, "serve.per_slot",
+                         {"check_every": 4}),
+        }[which]
+        reg, n_req = self._serve_traced(serve_setup, cls, **kw)
+        self._check_chains(reg, n_req, cat)
+        # and the export round-trips as valid Chrome-trace JSON
+        path = str(tmp_path / f"{which}.json")
+        obs.export_chrome_trace(path, registry=reg)
+        trace = json.loads(open(path).read())
+        xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+        assert len(xs) == len(reg.spans())
+        assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in xs)
+
+    def test_no_spans_when_tracing_disabled(self, serve_setup):
+        """Serving with tracing off must leave the registry span-free."""
+        from repro.serve import SlotBatcher
+
+        reg, _ = self._serve_traced_disabled(serve_setup, SlotBatcher,
+                                             check_every=4)
+        assert reg.spans() == []
+
+    def _serve_traced_disabled(self, serve_setup, batcher_cls, **kw):
+        from repro.serve import Engine, Request
+
+        cfg, model, params = serve_setup
+        eng = Engine(model, params, batch_size=2, max_len=64)
+        rng = np.random.default_rng(12)
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (4, 6)]
+        with obs.scoped() as reg:
+            b = batcher_cls(eng, **kw)
+            for i, p in enumerate(prompts):
+                b.submit(Request(uid=i, prompt=p, max_new=3))
+            b.run()
+        return reg, len(prompts)
+
+
+class TestSinkCrashSafety:
+    def test_write_flushes_immediately(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        sink = obs.JsonlSink(path)
+        sink.write("a", i=1)
+        # visible to a second reader BEFORE close (per-write flush)
+        assert obs.read_jsonl(path)[0]["i"] == 1
+        sink.close()
+
+    def test_closed_sink_raises(self, tmp_path):
+        sink = obs.JsonlSink(str(tmp_path / "m.jsonl"))
+        sink.close()
+        with pytest.raises(ValueError, match="closed"):
+            sink.write("late")
+        sink.close()                               # idempotent
+
+    def test_context_manager(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        with obs.JsonlSink(path) as sink:
+            sink.write("a", i=1)
+        assert obs.read_jsonl(path)[0]["i"] == 1
+
+    def test_threaded_writes_interleave_whole_lines(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        sink = obs.JsonlSink(path)
+
+        def worker(tid):
+            for i in range(50):
+                sink.write("w", tid=tid, i=i, pad="x" * 64)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        sink.close()
+        recs = obs.read_jsonl(path)
+        assert len(recs) == 200
+        seen = {(r["tid"], r["i"]) for r in recs}
+        assert len(seen) == 200                    # nothing torn or lost
+
+    def test_killed_writer_leaves_only_complete_lines(self, tmp_path):
+        """Regression: SIGKILL mid-stream must not leave partial JSON
+        (each record is one flushed write; nothing buffers across
+        records)."""
+        import os
+        import subprocess
+        import sys
+        import time
+
+        path = str(tmp_path / "kill.jsonl")
+        script = (
+            "from repro.obs import JsonlSink\n"
+            f"s = JsonlSink({path!r})\n"
+            "i = 0\n"
+            "while True:\n"
+            "    s.write('spin', i=i, pad='x' * 200)\n"
+            "    i += 1\n"
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        proc = subprocess.Popen([sys.executable, "-c", script], env=env)
+        try:
+            deadline = time.time() + 60
+            while time.time() < deadline:
+                if os.path.exists(path) and os.path.getsize(path) > 8192:
+                    break
+                time.sleep(0.05)
+            else:
+                raise AssertionError("writer produced no output")
+        finally:
+            proc.kill()
+            proc.wait()
+        lines = open(path).read().splitlines()
+        assert len(lines) >= 10
+        for ln in lines:
+            rec = json.loads(ln)                   # every line is whole
+            assert rec["kind"] == "spin"
+
+
+class TestScopedThreads:
+    def test_nested_scopes_do_not_leak_across_threads(self):
+        """Satellite: concurrent threads each nest scoped() registries;
+        counts must stay per-thread and the global must be untouched."""
+        g = obs.get_registry()
+        before = g.counter("thread.test").value
+        errors = []
+        start = threading.Barrier(6)
+
+        def worker(i):
+            try:
+                start.wait(timeout=30)
+                for _ in range(20):
+                    with obs.scoped() as outer:
+                        assert obs.get_registry() is outer
+                        outer.counter("thread.test").inc(i)
+                        with obs.scoped() as inner:
+                            assert obs.get_registry() is inner
+                            inner.counter("thread.test").inc(1000)
+                        assert obs.get_registry() is outer
+                        assert outer.counter("thread.test").value == i
+                        assert inner.counter("thread.test").value == 1000
+            except Exception as e:                 # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i + 1,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        assert g.counter("thread.test").value == before
+        assert obs.get_registry() is g
+
+
+class TestAggregate:
+    def test_world1_psum_equals_local(self):
+        """Single process, single device: aggregate='psum' must be the
+        plain local snapshot."""
+        with obs.scoped() as reg:
+            reg.counter("a").inc(3)
+            h = reg.histogram("h")
+            h.observe(2.0)
+            h.observe(4.0)
+            local = reg.snapshot()
+            agg = obs.snapshot(aggregate="psum")
+        assert agg["counters"]["a"] == local["counters"]["a"] == 3.0
+        assert agg["histograms"]["h"]["count"] == 2
+        assert agg["histograms"]["h"]["sum"] == 6.0
+        assert agg["histograms"]["h"]["min"] == 2.0
+        assert agg["histograms"]["h"]["max"] == 4.0
+
+    def test_default_is_local(self):
+        with obs.scoped() as reg:
+            reg.counter("b").inc(2)
+            snap = obs.snapshot()
+        assert snap == reg.snapshot()
+
+    def test_unknown_aggregate_rejected(self):
+        with pytest.raises(ValueError, match="aggregate"):
+            obs.snapshot(aggregate="allgather")
+
+    def test_summary_has_p99(self):
+        h = obs.Histogram()
+        for v in range(200):
+            h.observe(float(v))
+        s = h.summary()
+        assert s["p99"] >= s["p95"] >= s["p50"]
+        assert s["p99"] >= 190.0
